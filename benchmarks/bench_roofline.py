@@ -1,0 +1,55 @@
+"""Roofline table from the dry-run records (deliverable g).
+
+Reads results/dryrun_all.json (written by repro.launch.dryrun) and
+prints the three roofline terms, dominant bottleneck, useful-flops
+ratio and roofline fraction per (arch × shape × mesh)."""
+
+from __future__ import annotations
+
+import json
+import os
+
+from repro.launch.roofline import analyze, what_moves_it
+
+_RES = os.path.join(os.path.dirname(__file__), os.pardir, "results")
+_FINAL = os.path.join(_RES, "dryrun_final.json")
+DEFAULT = _FINAL if os.path.exists(_FINAL) else os.path.join(
+    _RES, "dryrun_all.json")
+
+
+def run(csv: list[str], path: str = DEFAULT) -> None:
+    if not os.path.exists(path):
+        print(f"(roofline: {path} not found — run repro.launch.dryrun "
+              "--out first)")
+        return
+    with open(path) as f:
+        records = json.load(f)
+    print("\n== roofline terms per cell (ms; dominant term -> lever) ==")
+    print(f"{'mesh':>8} {'arch':26s} {'shape':12s} {'comp':>8} {'mem':>8} "
+          f"{'coll':>8} {'dom':>5} {'useful':>7} {'MFU':>6}")
+    for rec in records:
+        r = analyze(rec)
+        if r.status != "ok":
+            print(f"{r.mesh:>8} {r.arch:26s} {r.shape:12s} "
+                  f"{'[' + r.status + '] ' + r.note[:60]}")
+            csv.append(f"roofline_{r.mesh}_{r.arch}_{r.shape},0,{r.status}")
+            continue
+        print(f"{r.mesh:>8} {r.arch:26s} {r.shape:12s} "
+              f"{r.compute_s*1e3:>8.2f} {r.memory_s*1e3:>8.2f} "
+              f"{r.collective_s*1e3:>8.2f} {r.dominant[:5]:>5} "
+              f"{r.useful_ratio:>7.2f} {r.mfu*100:>5.1f}%")
+        csv.append(f"roofline_{r.mesh}_{r.arch}_{r.shape},"
+                   f"{r.step_time_s*1e6:.1f},"
+                   f"dom={r.dominant};useful={r.useful_ratio:.2f};"
+                   f"mfu={r.mfu*100:.1f}%")
+
+
+def main() -> None:
+    csv: list[str] = []
+    run(csv)
+    for line in csv:
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Benchmark harness — one module per paper table/figure + the
+beyond-paper engines.  Prints ``name,us_per_call,derived`` CSV at the
+end (per-benchmark sections print richer tables above)."""
+
+from __future__ import annotations
+
+import time
+
+
+def main() -> None:
+    from benchmarks import (bench_roofline, bench_sweep, bench_table1,
+                            bench_table2, bench_table3, bench_tpu_tuning)
+
+    csv: list[str] = []
+    t0 = time.perf_counter()
+    bench_table1.run(csv)
+    bench_table2.run(csv)
+    bench_table3.run(csv)
+    bench_sweep.run(csv)
+    bench_sweep.run_warp_ablation(csv)
+    bench_tpu_tuning.run(csv)
+    bench_roofline.run(csv)
+    dt = time.perf_counter() - t0
+
+    print("\n== CSV (name,us_per_call,derived) ==")
+    for line in csv:
+        print(line)
+    print(f"\ntotal benchmark wall time: {dt:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""Batched serving example (continuous batching over decode slots).
+
+    PYTHONPATH=src python examples/serve_batch.py
+"""
+
+from repro.launch.serve import main
+
+main(["--arch", "qwen3-32b", "--preset", "smoke", "--requests", "10",
+      "--batch", "4", "--context", "64", "--max-new", "6"])

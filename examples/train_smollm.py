@@ -1,0 +1,21 @@
+"""End-to-end training driver (deliverable b): train the reduced
+smollm-135m for a few hundred steps on CPU with auto-tuned distributed
+config, checkpointing, and a mid-run injected failure.
+
+    PYTHONPATH=src python examples/train_smollm.py
+"""
+
+import shutil
+import tempfile
+
+from repro.launch.train import main
+
+ckpt = tempfile.mkdtemp(prefix="repro_ckpt_")
+try:
+    main(["--arch", "smollm-135m", "--preset", "smoke",
+          "--steps", "200", "--batch", "16", "--seq", "64",
+          "--lr", "3e-3", "--tune",
+          "--ckpt-dir", ckpt, "--ckpt-every", "50",
+          "--inject-failure", "120"])
+finally:
+    shutil.rmtree(ckpt, ignore_errors=True)

@@ -1,0 +1,23 @@
+"""Tune the 512-chip distributed configuration off-hardware (the paper's
+headline benefit at fleet scale).
+
+    PYTHONPATH=src python examples/tune_distributed.py
+"""
+
+from repro.core.tpu_machine import (TPUConfig, step_time, tune_distributed,
+                                    workload_from_arch)
+
+for arch, pods in [("minitron-8b", 1), ("qwen3-32b", 1),
+                   ("llama4-maverick-400b-a17b", 2)]:
+    w = workload_from_arch(arch, "train_4k")
+    best, t, ranked = tune_distributed(w, chips_per_pod=256, pods=pods)
+    base = step_time(w, TPUConfig(dp=16, tp=16, pods=pods))
+    print(f"{arch} ({pods} pod(s), {t['chips']} chips):")
+    print(f"  tuned : tp={best.tp} dp={best.dp} microbatches="
+          f"{best.microbatches} remat={best.remat} fsdp={best.fsdp} "
+          f"compress={best.compress_pod_grads}")
+    print(f"  modeled step {t['total']*1e3:.1f} ms "
+          f"(compute {t['compute']*1e3:.1f} / memory {t['memory']*1e3:.1f} "
+          f"/ exposed-coll {t['exposed_collective']*1e3:.1f}) vs baseline "
+          f"{base['total']*1e3:.1f} ms -> "
+          f"{base['total']/t['total']:.2f}x")

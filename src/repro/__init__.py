@@ -1,0 +1,10 @@
+"""repro — model-checking-based auto-tuning for a multi-pod JAX/TPU
+framework (reproduction + TPU-native extension of Garanina, Staroletov &
+Gorlatch, "Auto-Tuning High-Performance Programs Using Model Checking in
+Promela", 2023).
+
+Subpackages: core (the paper's contribution), models, configs, kernels,
+data, optim, checkpoint, runtime, distribute, launch.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,5 @@
+"""Checkpoint substrate: async sharded save/restore + elastic reshard."""
+
+from .store import CheckpointManager, load_checkpoint, save_checkpoint
+
+__all__ = ["CheckpointManager", "load_checkpoint", "save_checkpoint"]

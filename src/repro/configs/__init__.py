@@ -1,0 +1,6 @@
+"""Architecture configs: one module per assigned arch + registry."""
+from .base import SHAPES, ArchConfig, MoECfg, SSMCfg, ShapeSpec, supports
+from .registry import ARCHS, get_config
+
+__all__ = ["SHAPES", "ArchConfig", "MoECfg", "SSMCfg", "ShapeSpec",
+           "supports", "ARCHS", "get_config"]

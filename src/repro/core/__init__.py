@@ -1,0 +1,32 @@
+"""Core: model-checking-based auto-tuning (the paper's contribution).
+
+Public API:
+
+* :class:`~repro.core.platform.PlatformSpec` + :func:`~repro.core.platform.build_model`
+  — the abstract OpenCL/TPU platform as a Promela-like process system,
+* :func:`~repro.core.explorer.explore` — explicit-state verification,
+* :class:`~repro.core.properties.OverTime` / ``NonTermination`` — Φ_o / Φ_t,
+* :func:`~repro.core.bisect_search.find_minimal_time` — Fig. 1,
+* :func:`~repro.core.swarm.swarm_search` — Fig. 5,
+* :func:`~repro.core.sweep.sweep_times` — beyond-paper vectorized engine,
+* :class:`~repro.core.autotuner.AutoTuner` — the four-step method, packaged.
+"""
+
+from .autotuner import AutoTuner, FunctionTuner, TuneResult
+from .bisect_search import find_minimal_time
+from .counterexample import Counterexample
+from .explorer import ExploreResult, explore, replay
+from .platform import PlatformSpec, build_model
+from .properties import NonTermination, OverTime, trace_satisfies
+from .search_space import Param, SearchSpace, powers_of_two, wg_ts_space
+from .swarm import swarm_search
+from .sweep import cex_oracle, sweep_times
+from .wave_model import WaveParams, model_time, model_time_jnp
+
+__all__ = [
+    "AutoTuner", "FunctionTuner", "TuneResult", "find_minimal_time",
+    "Counterexample", "ExploreResult", "explore", "replay", "PlatformSpec",
+    "build_model", "NonTermination", "OverTime", "trace_satisfies", "Param",
+    "SearchSpace", "powers_of_two", "wg_ts_space", "swarm_search",
+    "cex_oracle", "sweep_times", "WaveParams", "model_time", "model_time_jnp",
+]

@@ -1,0 +1,173 @@
+"""Abstract TPU-pod machine model for distributed-configuration tuning.
+
+This is the paper's "Abstract Platform" (§3.1) re-instantiated for the
+512-chip target: instead of devices/units/PEs with a GMT memory ratio,
+the platform is pods × chips with three resources per chip — MXU
+(197 TFLOP/s bf16), HBM (819 GB/s) and ICI links (4 × 50 GB/s) — plus a
+slow inter-pod DCI (default 25 GB/s/chip-pair share).
+
+``TPUWorkload`` captures one training step analytically; the modeled
+step time plays the role of the paper's model ``time`` variable, and
+the search over :class:`TPUConfig` lattices runs through the same
+engines (bisection over Φ_o with the vectorized sweep as C_ex oracle —
+``repro.core.autotuner.FunctionTuner`` or ``tune_distributed`` below).
+
+Calibration: the analytic terms are aligned against the dry-run's
+compiled artifact for the baseline config (same quantities the roofline
+reports); the tuner then extrapolates across the lattice without
+recompiling every point — the paper's core benefit (no hardware, and
+here: not even 80 compiles) — and the chosen config is verified by ONE
+recompile (§Perf loop).
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Any
+
+from .search_space import Param, SearchSpace
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 4 * 50e9
+DCI_BW = 25e9
+
+
+@dataclass(frozen=True)
+class TPUWorkload:
+    """One training step of a stacked-layer LM (analytic)."""
+
+    params: int                      # total parameter count
+    active_params: int               # per-token touched params (MoE)
+    layers: int
+    d_model: int
+    seq: int
+    global_batch: int
+    vocab: int
+    dtype_bytes: int = 2
+    flops_const: float = 6.0         # 6 = fwd+bwd
+
+
+@dataclass(frozen=True)
+class TPUConfig:
+    """A tuning-parameter configuration (the WG/TS analogue)."""
+
+    dp: int                          # data-parallel ways (per pod)
+    tp: int                          # tensor-parallel ways
+    pods: int = 1
+    microbatches: int = 1
+    remat: str = "full"              # none | dots | full
+    compress_pod_grads: bool = False
+    fsdp: bool = False               # shard params over dp (ZeRO-3-ish)
+
+
+def step_time(w: TPUWorkload, c: TPUConfig, *, overlap: float = 0.7
+              ) -> dict[str, float]:
+    """Modeled per-step time decomposition (seconds).
+
+    overlap: fraction of collective time hidden under compute (TPU async
+    collectives + microbatch pipelining)."""
+
+    chips = c.dp * c.tp * c.pods
+    tokens = w.seq * w.global_batch
+
+    # -- compute ------------------------------------------------------------
+    remat_mult = {"none": 1.0, "dots": 1.15, "full": 4.0 / 3.0}[c.remat]
+    flops = w.flops_const * w.active_params * tokens * remat_mult
+    compute = flops / (chips * PEAK_FLOPS)
+
+    # -- memory -------------------------------------------------------------
+    # weights re-streamed once per microbatch (fwd) + once (bwd);
+    # activations in/out once; optimizer state touched once.
+    w_bytes = w.params * w.dtype_bytes / (c.tp * (c.dp if c.fsdp else 1))
+    act_bytes = tokens // (c.dp * c.pods) * w.d_model * w.dtype_bytes \
+        * w.layers * (4 if c.remat == "none" else 2)
+    opt_bytes = w.params * 12 / (c.tp * (c.dp if c.fsdp else 1))
+    hbm = (w_bytes * (c.microbatches + 1) + act_bytes + opt_bytes) / HBM_BW
+
+    # -- collectives ----------------------------------------------------------
+    # DP gradient all-reduce (ring): 2*(n-1)/n * bytes; FSDP swaps it for
+    # reduce-scatter + all-gather (same volume, half latency exposure).
+    grad_bytes = w.params * w.dtype_bytes / c.tp
+    dp_ways = c.dp
+    dp_ar = 2 * (dp_ways - 1) / max(dp_ways, 1) * grad_bytes / ICI_BW
+    # TP per-layer activation collectives (2 all-reduces/layer fwd+bwd)
+    tp_bytes = (tokens // (c.dp * c.pods)) * w.d_model * w.dtype_bytes
+    tp_ar = (4 * (c.tp - 1) / max(c.tp, 1) * tp_bytes * w.layers /
+             max(c.microbatches, 1) * c.microbatches) / ICI_BW \
+        if c.tp > 1 else 0.0
+    # pod-axis gradient reduction over DCI (compressible)
+    pod_bytes = grad_bytes * (0.25 if c.compress_pod_grads else 1.0)
+    pod_ar = 2 * (c.pods - 1) / max(c.pods, 1) * pod_bytes / DCI_BW \
+        if c.pods > 1 else 0.0
+
+    collective = dp_ar + tp_ar + pod_ar
+    exposed = collective * (1.0 - overlap * min(1.0, c.microbatches / 2))
+    total = max(compute, hbm) + exposed
+    return {"compute": compute, "memory": hbm, "collective": collective,
+            "exposed_collective": exposed, "total": total,
+            "chips": chips}
+
+
+def hbm_fits(w: TPUWorkload, c: TPUConfig, *, hbm_bytes: float = 16e9
+             ) -> bool:
+    # FSDP shards parameters/optimizer over the dp axes of every pod
+    chips = c.tp * ((c.dp * c.pods) if c.fsdp else 1)
+    resident = w.params * (w.dtype_bytes + 8 + 4) / chips
+    act = (w.seq * w.global_batch // (c.dp * c.pods)) * w.d_model * \
+        w.dtype_bytes * (w.layers if c.remat == "none" else 2)
+    return resident + act < hbm_bytes * 0.9
+
+
+def config_space(chips_per_pod: int = 256, pods: int = 1) -> SearchSpace:
+    tps = [t for t in (1, 2, 4, 8, 16, 32) if chips_per_pod % t == 0]
+    space = SearchSpace(params=[
+        Param("tp", tuple(tps)),
+        Param("microbatches", (1, 2, 4, 8)),
+        Param("remat", ("none", "dots", "full")),
+        Param("fsdp", (False, True)),
+        Param("compress_pod_grads", ((False, True) if pods > 1
+                                     else (False,))),
+    ])
+    return space
+
+
+def tune_distributed(w: TPUWorkload, *, chips_per_pod: int = 256,
+                     pods: int = 1, hbm_bytes: float = 16e9):
+    """Sweep the config lattice through the machine model; returns
+    (best TPUConfig, best step decomposition, ranked list)."""
+
+    space = config_space(chips_per_pod, pods)
+    ranked = []
+    for cfg in space:
+        c = TPUConfig(dp=chips_per_pod // cfg["tp"], tp=cfg["tp"],
+                      pods=pods, microbatches=cfg["microbatches"],
+                      remat=cfg["remat"], fsdp=cfg["fsdp"],
+                      compress_pod_grads=cfg["compress_pod_grads"])
+        if not hbm_fits(w, c, hbm_bytes=hbm_bytes):
+            continue
+        t = step_time(w, c)
+        ranked.append((t["total"], c, t))
+    if not ranked:
+        raise RuntimeError("no feasible configuration fits HBM")
+    ranked.sort(key=lambda r: r[0])
+    return ranked[0][1], ranked[0][2], ranked
+
+
+def workload_from_arch(arch: str, shape_name: str) -> TPUWorkload:
+    from ..configs import SHAPES, get_config
+    from ..launch.roofline import active_params
+    from ..models.api import build_model
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    api = build_model(cfg)
+    return TPUWorkload(params=api.param_count(),
+                       active_params=active_params(arch),
+                       layers=cfg.n_layers, d_model=cfg.d_model,
+                       seq=shape.seq_len, global_batch=shape.global_batch,
+                       vocab=cfg.vocab)
+
+
+__all__ = ["TPUWorkload", "TPUConfig", "step_time", "hbm_fits",
+           "config_space", "tune_distributed", "workload_from_arch"]

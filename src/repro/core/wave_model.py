@@ -1,0 +1,175 @@
+"""Closed-form wave-timing model of the abstract platform.
+
+The process model's time is deterministic per configuration (lock-step
+clock, interleaving-invariant — tested).  This module is the closed form
+of that time, derived from the scheduling semantics in
+:mod:`repro.core.platform`:
+
+* ``items = size // TS`` work items, grouped into workgroups of ``WG``
+  (last group may be short),
+* a unit executes its groups sequentially; a group of ``cnt`` items runs
+  in ``ceil(cnt / NP)`` waves of at most NP resident elements,
+* abstract kernel wave time  C = items·(GMT·TS + TS) + GMT,
+* minimum kernel wave time   GMT·TS, plus a per-group epilogue
+  ``(min(cnt, NP) − 1) + GMT`` and a host-side final reduction of one
+  unit per group,
+* optional per-group launch overhead ``L``,
+* ND·NU units take groups round-robin; total time is the max over units
+  (exact for the round-robin assignment).
+
+``model_time`` is the exact integer scalar form (tests assert equality
+with the explicit-state simulator); ``model_time_jnp`` is the
+vectorized/jittable form used by the sweep engine — identical formulas
+over arrays.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def _cdiv(a, b):
+    return -(-a // b)
+
+
+@dataclass(frozen=True)
+class WaveParams:
+    size: int
+    NP: int = 4
+    GMT: int = 4
+    L: int = 0
+    kind: str = "abstract"   # "abstract" | "minimum"
+    ND: int = 1
+    NU: int = 1
+    # Warp-based scheduling (the paper's §8 planned extension): resident
+    # elements execute in warps of this size; multiple resident warps
+    # hide global-memory latency, dividing the effective GMT (down to 1).
+    warp: int | None = None
+
+    def gmt_eff(self, resident: int) -> int:
+        if self.warp is None:
+            return self.GMT
+        n_warps = max(1, -(-resident // self.warp))
+        return max(1, -(-self.GMT // n_warps))
+
+
+def _group_structure(size: int, WG: int, TS: int):
+    items = size // TS
+    full = items // WG
+    rem = items % WG
+    g_total = full + (1 if rem else 0)
+    return items, full, rem, g_total
+
+
+def _wave_time(p: WaveParams, TS: int, items: int, resident: int) -> int:
+    g = p.gmt_eff(resident)
+    if p.kind == "abstract":
+        return items * (g * TS + TS) + g
+    return g * TS
+
+
+def _group_time(p: WaveParams, cnt: int, TS: int, items: int) -> int:
+    waves = _cdiv(cnt, p.NP)
+    resident = min(cnt, p.NP)
+    t = waves * _wave_time(p, TS, items, resident)
+    if p.kind == "minimum":
+        t += (resident - 1) + p.gmt_eff(resident)
+    return t + p.L
+
+
+def model_time(p: WaveParams, WG: int, TS: int) -> int:
+    """Exact model termination time for one configuration."""
+
+    items, full, rem, g_total = _group_structure(p.size, WG, TS)
+    if items < 1:
+        raise ValueError("TS larger than size: no work items")
+    if full == 0:            # single short group
+        full, rem = 0, items
+        g_total = 1
+
+    U = p.ND * p.NU
+    t_full = _group_time(p, min(WG, items), TS, items)
+    t_rem = _group_time(p, rem, TS, items) if rem else 0
+
+    # round-robin assignment: unit 0 is the fullest; the remainder group
+    # (index g_total-1) lands on unit (g_total-1) % U.
+    count0 = _cdiv(g_total, U)
+    if rem:
+        r = (g_total - 1) % U
+        count_r = _cdiv(g_total - r, U)
+        t0 = count0 * t_full - (t_full - t_rem) * (1 if r == 0 else 0)
+        tr = count_r * t_full - (t_full - t_rem)
+        device_t = max(t0, tr)
+    else:
+        device_t = count0 * t_full
+
+    host_t = g_total if p.kind == "minimum" else 0
+    return device_t + host_t
+
+
+def model_time_jnp(p: WaveParams, WG, TS):
+    """Vectorized/jittable twin of :func:`model_time` (same formulas).
+
+    Uses int64 when ``jax_enable_x64`` is on, else int32 (values must fit;
+    the exact engine for arbitrary sizes is the numpy path in
+    :mod:`repro.core.sweep`)."""
+
+    idt = jnp.int64 if jnp.zeros((), jnp.int64).dtype == jnp.int64 else jnp.int32
+    WG = jnp.asarray(WG, idt)
+    TS = jnp.asarray(TS, idt)
+    size = idt(p.size)
+    NP = idt(p.NP)
+    GMT = idt(p.GMT)
+
+    items = size // TS
+    full = items // WG
+    rem = items % WG
+    # single short group when items < WG
+    short = full == 0
+    full = jnp.where(short, 0, full)
+    rem = jnp.where(short, items, rem)
+    g_total = full + (rem > 0)
+
+    cnt_full = jnp.minimum(WG, items)
+
+    def gmt_eff(resident):
+        if p.warp is None:
+            return GMT
+        n_warps = jnp.maximum(1, -(-resident // idt(p.warp)))
+        return jnp.maximum(1, -(-GMT // n_warps))
+
+    def wave_time(its, resident):
+        g = gmt_eff(resident)
+        if p.kind == "abstract":
+            return its * (g * TS + TS) + g
+        return g * TS
+
+    def group_time(cnt):
+        waves = -(-cnt // NP)
+        resident = jnp.minimum(cnt, NP)
+        t = waves * wave_time(items, resident)
+        if p.kind == "minimum":
+            t = t + (resident - 1) + gmt_eff(resident)
+        return t + p.L
+
+    U = idt(p.ND * p.NU)
+    t_full = group_time(cnt_full)
+    t_rem = jnp.where(rem > 0, group_time(jnp.maximum(rem, 1)), 0)
+
+    count0 = -(-g_total // U)
+    r = (g_total - 1) % U
+    count_r = -(-(g_total - r) // U)
+    t0 = count0 * t_full - jnp.where(r == 0, t_full - t_rem, 0)
+    tr = count_r * t_full - (t_full - t_rem)
+    device_t = jnp.where(rem > 0, jnp.maximum(t0, tr), count0 * t_full)
+
+    host_t = g_total if p.kind == "minimum" else 0
+    t = device_t + host_t
+    # invalid configs (no work items) get +inf-like sentinel
+    return jnp.where(items >= 1, t, jnp.iinfo(idt).max)
+
+
+__all__ = ["WaveParams", "model_time", "model_time_jnp"]

@@ -1,0 +1,7 @@
+"""Distribution: logical-axis sharding rules, mesh context, pjit helpers."""
+
+from .sharding import (Rules, default_rules, logical_constraint,
+                       tree_shardings, use_mesh)
+
+__all__ = ["Rules", "default_rules", "logical_constraint", "tree_shardings",
+           "use_mesh"]

@@ -1,0 +1,75 @@
+"""Jitted wrapper + tuning hooks for flash attention."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ...core.search_space import Param, SearchSpace
+from .kernel import flash_attention_bhsd
+from .ref import attention_ref
+
+
+def _is_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    block_q: int = 512, block_k: int = 512,
+                    interpret: bool | None = None) -> jax.Array:
+    """q, k, v: (B, H, S, D).  GQA callers broadcast KV heads first."""
+
+    interpret = _is_cpu() if interpret is None else interpret
+    B, H, S, D = q.shape
+    fold = lambda x: x.reshape(B * H, S, D)
+    o = flash_attention_bhsd(fold(q), fold(k), fold(v), causal=causal,
+                             window=window, block_q=block_q,
+                             block_k=block_k, interpret=interpret)
+    return o.reshape(B, H, S, D)
+
+
+def tuning_space(S: int, D: int, dtype_bytes: int = 2,
+                 vmem_bytes: int = 64 * 2**20) -> SearchSpace:
+    def blocks(dim: int) -> tuple[int, ...]:
+        vals = []
+        v = 128
+        while v <= min(dim, 4096):
+            if dim % v == 0:
+                vals.append(v)
+            v *= 2
+        return tuple(vals) or (min(dim, 128),)
+
+    space = SearchSpace(params=[Param("block_q", blocks(S)),
+                                Param("block_k", blocks(S))])
+    # q block + k/v blocks + f32 scratch must fit VMEM
+    space.constraints.append(lambda c: (
+        (c["block_q"] + 2 * c["block_k"]) * D * dtype_bytes
+        + c["block_q"] * (2 * 128 + D) * 4) <= vmem_bytes // 2)
+    return space
+
+
+def cost_model(cfg: dict, *, S: int, D: int, BH: int, causal: bool = True,
+               dtype_bytes: int = 2, peak_tflops: float = 197.0,
+               hbm_gbps: float = 819.0, grid_overhead_us: float = 0.6) -> float:
+    """Modeled microseconds per chip: MXU time on visited blocks vs HBM
+    re-streaming of K/V per q block (the block-size trade-off)."""
+
+    bq, bk = cfg["block_q"], cfg["block_k"]
+    nq, nk = S // bq, S // bk
+    # visited (i, j) block pairs under causal block sparsity
+    visited = sum(min(nk, ((i + 1) * bq - 1) // bk + 1) for i in range(nq)) \
+        if causal else nq * nk
+    flops = 4 * BH * visited * bq * bk * D          # qk^T + pv
+    compute_us = flops / (peak_tflops * 1e6)
+    kv_bytes = BH * visited * bk * D * 2 * dtype_bytes
+    q_bytes = BH * S * D * dtype_bytes * 2          # q read + o write
+    mem_us = (kv_bytes + q_bytes) / (hbm_gbps * 1e3)
+    return max(compute_us, mem_us) + BH * visited * grid_overhead_us / 16
+
+
+__all__ = ["flash_attention", "tuning_space", "cost_model", "attention_ref"]

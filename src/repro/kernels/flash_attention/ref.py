@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for flash attention (causal / sliding-window)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, window: int | None = None,
+                  scale: float | None = None) -> jnp.ndarray:
+    """q, k, v: (..., S, D) -> (..., S, D); f32 softmax accumulation.
+
+    ``window`` is a sliding-attention width W: position i attends to
+    [i-W+1, i] (combined with causality), as in Mistral/Mixtral SWA."""
+
+    S = q.shape[-2]
+    scale = scale if scale is not None else q.shape[-1] ** -0.5
+    s = jnp.einsum("...qd,...kd->...qk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qi = jnp.arange(S)[:, None]
+    ki = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= ki <= qi
+    if window is not None:
+        mask &= ki >= qi - window + 1
+    s = jnp.where(mask, s, -jnp.inf)
+    p = _softmax(s)
+    return jnp.einsum("...qk,...kd->...qd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def _softmax(s: jnp.ndarray) -> jnp.ndarray:
+    m = jnp.max(s, axis=-1, keepdims=True)
+    # fully-masked rows (can happen with tiny windows) -> zeros, not NaN
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(s - m)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    return p / jnp.maximum(denom, 1e-30)
+
+
+__all__ = ["attention_ref"]

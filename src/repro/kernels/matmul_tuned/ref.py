@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the tiled matmul."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+__all__ = ["matmul_ref"]

@@ -1,0 +1,43 @@
+"""Jitted wrapper for the on-device lattice sweep kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...core.wave_model import WaveParams
+from .kernel import SENTINEL, sweep_eval_rows
+from .ref import sweep_ref
+
+_LANES = 128
+
+
+def _is_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("p", "block_rows", "interpret"))
+def sweep_eval(wg: jax.Array, ts: jax.Array, p: WaveParams, *,
+               block_rows: int = 64, interpret: bool | None = None
+               ) -> jax.Array:
+    """Evaluate the Minimum-model time for flat config arrays (n,).
+
+    Pads to a (rows, 128) view, runs the Pallas kernel, returns (n,)."""
+
+    interpret = _is_cpu() if interpret is None else interpret
+    n = wg.shape[0]
+    tile = block_rows * _LANES
+    padded = max(tile, -(-n // tile) * tile)
+    pad = padded - n
+    wg2 = jnp.pad(wg.astype(jnp.int32), (0, pad), constant_values=1)
+    ts2 = jnp.pad(ts.astype(jnp.int32), (0, pad),
+                  constant_values=p.size + 1)   # -> sentinel
+    out = sweep_eval_rows(wg2.reshape(-1, _LANES), ts2.reshape(-1, _LANES),
+                          p, block_rows=block_rows, interpret=interpret)
+    return out.reshape(-1)[:n]
+
+
+__all__ = ["sweep_eval", "sweep_ref", "SENTINEL"]

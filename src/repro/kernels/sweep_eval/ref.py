@@ -1,0 +1,12 @@
+"""Oracle for the sweep-eval kernel: the wave model's jnp twin."""
+
+from __future__ import annotations
+
+from ...core.wave_model import WaveParams, model_time_jnp
+
+
+def sweep_ref(p: WaveParams, WG, TS):
+    return model_time_jnp(p, WG, TS)
+
+
+__all__ = ["sweep_ref", "WaveParams"]

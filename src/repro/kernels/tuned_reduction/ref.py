@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the tuned reduction (the paper's §7 Minimum problem,
+generalized to any monoid)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+MONOIDS = {
+    "min": (jnp.min, jnp.minimum, lambda dt: jnp.array(jnp.iinfo(dt).max if
+            jnp.issubdtype(dt, jnp.integer) else jnp.inf, dt)),
+    "max": (jnp.max, jnp.maximum, lambda dt: jnp.array(jnp.iinfo(dt).min if
+            jnp.issubdtype(dt, jnp.integer) else -jnp.inf, dt)),
+    "sum": (jnp.sum, jnp.add, lambda dt: jnp.array(0, dt)),
+}
+
+
+def reduce_ref(x: jnp.ndarray, op: str = "min") -> jnp.ndarray:
+    """Reference reduction over the whole array."""
+
+    full, _, _ = MONOIDS[op]
+    return full(x)
+
+
+__all__ = ["reduce_ref", "MONOIDS"]

@@ -1,0 +1,4 @@
+"""Launch layer: production meshes, dry-run driver, train/serve CLIs.
+
+NOTE: do not import repro.launch.dryrun from tests — it forces the
+512-device XLA flag at import time (by design)."""

@@ -1,0 +1,485 @@
+"""Cell lowering: one (architecture × shape × mesh) dry-run unit.
+
+Used by launch/dryrun.py (which sets the 512-device XLA flag first) and
+by the roofline/benchmark tooling.  Produces, per cell:
+
+* lower + compile success (the multi-pod dry-run deliverable),
+* ``memory_analysis`` (per-device bytes: argument/output/temp/peak),
+* ``cost_analysis``   (per-device HLO FLOPs + bytes accessed),
+* collective-bytes breakdown parsed from the compiled HLO,
+* the roofline terms (see repro/launch/roofline.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+import time
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import SHAPES, get_config, supports
+from ..configs.base import ArchConfig, ShapeSpec
+from ..data.pipeline import make_batch_specs
+from ..distribute.sharding import (Rules, default_rules, shard_like,
+                                   tree_shardings, use_mesh)
+from ..models.api import build_model
+from ..models.common import abstract_params, axes_tree
+from ..runtime.train import (TrainConfig, abstract_train_state,
+                             build_train_step)
+
+
+def rules_for_arch(cfg: ArchConfig, *, multi_pod: bool = False,
+                   overrides: dict | None = None) -> Rules:
+    """Arch-aware default rules (DESIGN.md §4): MoE archs whose expert
+    count does not divide the model axis shard each expert's d_ff
+    instead (mixtral: 8 experts, 16-way model -> expert_mlp)."""
+
+    rules = default_rules(multi_pod)
+    if cfg.moe is not None and cfg.moe.num_experts % 16 != 0:
+        rules = rules.replace(experts=None, expert_mlp="model")
+    if overrides:
+        rules = rules.replace(**overrides)
+    return rules
+
+
+def batch_axes(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    out = {"tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+    if cfg.family == "vlm":
+        out["img_embeds"] = ("batch", None, None)
+    if cfg.is_encdec:
+        out["frames"] = ("batch", None, None)
+    return out
+
+
+@dataclass
+class CellResult:
+    arch: str
+    shape: str
+    mesh: str
+    status: str                   # ok | skipped | failed
+    reason: str = ""
+    n_devices: int = 0
+    lower_s: float = 0.0
+    compile_s: float = 0.0
+    memory: dict = field(default_factory=dict)
+    cost: dict = field(default_factory=dict)
+    collectives: dict = field(default_factory=dict)
+    param_count: int = 0
+    settings: dict = field(default_factory=dict)
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\]))\S*\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_DT_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+             "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+             "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DT_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DT_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-type (count, result bytes) of collective ops in an HLO module.
+
+    Result-shape bytes approximate the payload: exact for all-reduce and
+    collective-permute, the gathered size for all-gather, N× the output
+    for reduce-scatter (documented in EXPERIMENTS.md §Roofline)."""
+
+    out: dict[str, dict[str, int]] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        type_str, op = m.group(1), m.group(2)
+        b = _type_bytes(type_str)
+        rec = out.setdefault(op, {"count": 0, "bytes": 0})
+        rec["count"] += 1
+        rec["bytes"] += b
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+def _memory_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    keys = ["argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes"]
+    out = {}
+    for k in keys:
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    if "argument_size_in_bytes" in out and "temp_size_in_bytes" in out:
+        out["peak_hbm_bytes"] = (out["argument_size_in_bytes"]
+                                 + out["output_size_in_bytes"]
+                                 + out["temp_size_in_bytes"]
+                                 - out.get("alias_size_in_bytes", 0))
+    return out
+
+
+def _cost_dict(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    out = {}
+    for k in ("flops", "bytes accessed", "optimal_seconds"):
+        if k in ca:
+            out[k.replace(" ", "_")] = float(ca[k])
+    # per-operand byte accesses if present
+    extra = {k: float(v) for k, v in ca.items()
+             if k.startswith("bytes accessed")}
+    if extra:
+        out["bytes_accessed_detail"] = {k: v for k, v in sorted(extra.items())}
+    return out
+
+
+def auto_microbatches(cfg: ArchConfig, shape: ShapeSpec, n_dp: int,
+                      budget_bytes: float = 4e9) -> int:
+    """Machine-model-driven default gradient-accumulation factor: the
+    remat'd scan saves one carry per block; pick the smallest power of
+    two keeping the per-device saved-activation stack under budget.
+    (This is the auto-tuner's memory-term lever applied as a default —
+    the §Perf loop refines it per cell.)"""
+
+    from ..models.transformer import _block_plan
+    _, n_blocks = _block_plan(cfg)
+    b_loc = max(1, shape.global_batch // n_dp)
+    carry = n_blocks * b_loc * shape.seq_len * cfg.d_model * 2
+    if cfg.ssm is not None:   # SSD intra-chunk tensors are heavier
+        carry *= 2
+    if cfg.is_encdec:         # decoder+cross stacks and encoder residency
+        carry *= 6
+    mb = 1
+    while carry / mb > budget_bytes and mb < b_loc:
+        mb *= 2
+    return mb
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               rules_overrides: dict | None = None,
+               tcfg: TrainConfig | None = None,
+               remat: str | None = None,
+               logits_dtype: str | None = None,
+               cfg_overrides: dict | None = None,
+               capture_hlo: bool = False,
+               mesh=None) -> CellResult:
+    from .mesh import make_production_mesh
+
+    cfg = get_config(arch)
+    if remat:
+        cfg = cfg.replace(remat=remat)
+    if logits_dtype:
+        cfg = cfg.replace(logits_dtype=logits_dtype)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    shape = SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    res = CellResult(arch=arch, shape=shape_name, mesh=mesh_name, status="ok",
+                     settings={"remat": cfg.remat,
+                               "logits_dtype": cfg.logits_dtype,
+                               "rules_overrides": rules_overrides or {},
+                               "microbatches": tcfg.microbatches if tcfg else 1})
+
+    ok, why = supports(cfg, shape)
+    if not ok:
+        res.status, res.reason = "skipped", why
+        return res
+
+    mesh = mesh if mesh is not None else make_production_mesh(
+        multi_pod=multi_pod)
+    res.n_devices = mesh.devices.size
+    rules = rules_for_arch(cfg, multi_pod=multi_pod,
+                           overrides=rules_overrides)
+    api = build_model(cfg)
+    res.param_count = api.param_count()
+
+    try:
+        with use_mesh(mesh, rules):
+            if shape.kind == "train":
+                tc = tcfg or TrainConfig(microbatches=0)
+                if tc.microbatches == 0:
+                    n_dp = 32 if multi_pod else 16
+                    tc = dataclasses.replace(
+                        tc, microbatches=auto_microbatches(cfg, shape, n_dp))
+                res.settings["microbatches"] = tc.microbatches
+                state = abstract_train_state(api, tc)
+                step = build_train_step(api, tc)
+                state_axes = api.axes()
+                from ..runtime.train import TrainState
+                from ..optim.adamw import OptState
+                st_ax = TrainState(
+                    params=state_axes,
+                    opt=OptState(step=(), m=state_axes, v=state_axes),
+                    ef_residual=state_axes if tc.compress_pod_grads else None)
+                st_sh = shard_like(state, st_ax, mesh, rules)
+                batch = make_batch_specs(cfg, shape)
+                b_sh = shard_like(batch, batch_axes(cfg, shape), mesh, rules)
+                fn = jax.jit(step, in_shardings=(st_sh, b_sh),
+                             out_shardings=(st_sh, None),
+                             donate_argnums=(0,))
+                t0 = time.perf_counter()
+                lowered = fn.lower(state, batch)
+                res.lower_s = time.perf_counter() - t0
+            elif shape.kind == "prefill":
+                params = api.abstract()
+                p_sh = shard_like(params, api.axes(), mesh, rules)
+                batch = make_batch_specs(cfg, shape)
+                batch.pop("labels")
+                b_sh = shard_like(batch, {k: v for k, v in batch_axes(
+                    cfg, shape).items() if k in batch}, mesh, rules)
+
+                def prefill(params, batch):
+                    logits = api.forward(params, batch)
+                    return logits[:, -1]   # serving prefill emits last token
+
+                fn = jax.jit(prefill, in_shardings=(p_sh, b_sh))
+                t0 = time.perf_counter()
+                lowered = fn.lower(params, batch)
+                res.lower_s = time.perf_counter() - t0
+            else:  # decode
+                params = api.abstract()
+                p_sh = shard_like(params, api.axes(), mesh, rules)
+                B = shape.global_batch
+                dspecs = api.decode_state_specs(B, shape.seq_len)
+                dstate = abstract_params(dspecs)
+                d_sh = shard_like(dstate, axes_tree(dspecs), mesh, rules)
+                from ..distribute.sharding import arg_sharding
+                tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+                tok_sh = arg_sharding((B, 1), ("batch", None), mesh, rules)
+                cur = jax.ShapeDtypeStruct((), jnp.int32)
+
+                def serve_step(params, state, tokens, cur_len):
+                    return api.decode_step(params, state, tokens, cur_len)
+
+                fn = jax.jit(serve_step,
+                             in_shardings=(p_sh, d_sh, tok_sh,
+                                           NamedSharding(mesh, P())),
+                             out_shardings=(None, d_sh),
+                             donate_argnums=(1,))
+                t0 = time.perf_counter()
+                lowered = fn.lower(params, dstate, tok, cur)
+                res.lower_s = time.perf_counter() - t0
+
+            t0 = time.perf_counter()
+            compiled = lowered.compile()
+            res.compile_s = time.perf_counter() - t0
+            res.memory = _memory_dict(compiled)
+            res.cost = _cost_dict(compiled)
+            try:
+                hlo = compiled.as_text()
+            except Exception:
+                hlo = lowered.as_text()
+            res.collectives = collective_bytes(hlo)
+            if capture_hlo:
+                res.settings["hlo_len"] = len(hlo)
+    except Exception as e:
+        res.status = "failed"
+        res.reason = f"{type(e).__name__}: {e}"
+    return res
+
+
+def lower_block_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+                     part: str = "decoder",
+                     rules_overrides: dict | None = None,
+                     remat: str | None = None,
+                     cfg_overrides: dict | None = None,
+                     mesh=None) -> CellResult:
+    """Lower ONE scan block (fwd, or fwd+bwd for train shapes) under the
+    same mesh/shardings as the full module.
+
+    XLA's HloCostAnalysis counts a while-loop body once regardless of the
+    trip count (verified by tests/test_dryrun), so per-cell roofline
+    totals are composed as  module + (trips - 1) x block  -- see
+    repro/launch/roofline.py.  ``settings["trips"]`` holds the trip
+    count."""
+
+    from .mesh import make_production_mesh
+    from ..distribute.sharding import arg_sharding
+    from ..models import attention as attn_mod
+    from ..models import transformer as tfm
+    from ..models.api import make_decode_body
+    from ..models.common import PSpec, rms_norm
+    from ..models.transformer import _block_plan, _remat, layer_forward
+
+    cfg = get_config(arch)
+    if remat:
+        cfg = cfg.replace(remat=remat)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    shape = SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    res = CellResult(arch=arch, shape=shape_name, mesh=mesh_name,
+                     status="ok", settings={"part": part,
+                                            "remat": cfg.remat})
+    ok, why = supports(cfg, shape)
+    if not ok:
+        res.status, res.reason = "skipped", why
+        return res
+
+    mesh = mesh if mesh is not None else make_production_mesh(
+        multi_pod=multi_pod)
+    res.n_devices = mesh.devices.size
+    rules = rules_for_arch(cfg, multi_pod=multi_pod,
+                           overrides=rules_overrides)
+    api = build_model(cfg)
+
+    if part == "encoder":
+        kinds, trips = ["encoder"], cfg.encoder_layers
+        seq = shape.seq_len if shape.kind == "train" else cfg.enc_seq
+        seq = cfg.enc_seq
+    else:
+        kinds, trips = _block_plan(cfg)
+        seq = shape.seq_len
+    res.settings["trips"] = trips
+
+    B = shape.global_batch
+    d = cfg.d_model
+    block_specs: Any = {f"{i}_{kind}": tfm.layer_specs(cfg, kind)
+                        for i, kind in enumerate(kinds)}
+    encdec_dec = cfg.is_encdec and part == "decoder"
+    if encdec_dec:
+        block_specs = (block_specs,
+                       {"x": attn_mod.attn_specs(cfg, cross=True),
+                        "ln_x": tfm._norm_spec(cfg)})
+
+    x_axes = ("batch", None, None)
+
+    def block_fwd(bp, x, extras):
+        positions = jnp.broadcast_to(
+            jnp.arange(x.shape[1], dtype=jnp.int32), (B, x.shape[1]))
+        enc_out = extras.get("enc_out")
+        if encdec_dec:
+            dp, xp = bp
+            h = layer_forward(dp["0_dense"], cfg, "dense", x, positions)
+            a = attn_mod.attention(xp["x"], cfg, rms_norm(h, xp["ln_x"]),
+                                   positions, x_kv=enc_out)
+            return h + a
+        h = x
+        for i, kind in enumerate(kinds):
+            h = layer_forward(bp[f"{i}_{kind}"], cfg, kind, h, positions,
+                              enc_out=enc_out, causal=(part != "encoder"))
+        return h
+
+    try:
+        with use_mesh(mesh, rules):
+            if shape.kind in ("train", "prefill"):
+                bp = abstract_params(block_specs)
+                bp_sh = shard_like(bp, axes_tree(block_specs), mesh, rules)
+                x = jax.ShapeDtypeStruct((B, seq, d), jnp.bfloat16)
+                x_sh = arg_sharding((B, seq, d), x_axes, mesh, rules)
+                extras, extra_sh = {}, {}
+                if cfg.family == "vlm" and part == "decoder":
+                    n = cfg.n_img_tokens
+                    extras["enc_out"] = jax.ShapeDtypeStruct(
+                        (B, n, d), jnp.bfloat16)
+                    extra_sh["enc_out"] = arg_sharding((B, n, d), x_axes,
+                                                       mesh, rules)
+                if encdec_dec:
+                    n = cfg.enc_seq
+                    extras["enc_out"] = jax.ShapeDtypeStruct(
+                        (B, n, d), jnp.bfloat16)
+                    extra_sh["enc_out"] = arg_sharding((B, n, d), x_axes,
+                                                       mesh, rules)
+
+                if shape.kind == "train":
+                    def train_block(bp, x, ct, extras):
+                        f = _remat(cfg, lambda b, y: block_fwd(b, y, extras))
+                        out, vjp = jax.vjp(f, bp, x)
+                        dbp, dx = vjp(ct)
+                        return out, dbp, dx
+
+                    fn = jax.jit(train_block,
+                                 in_shardings=(bp_sh, x_sh, x_sh, extra_sh))
+                    args = (bp, x, x, extras)
+                else:
+                    fn = jax.jit(block_fwd,
+                                 in_shardings=(bp_sh, x_sh, extra_sh))
+                    args = (bp, x, extras)
+            else:  # decode block
+                bp = abstract_params(block_specs)
+                bp_sh = shard_like(bp, axes_tree(block_specs), mesh, rules)
+                cspecs = api.decode_block_specs(B, shape.seq_len)
+                cache = abstract_params(cspecs)
+                c_sh = shard_like(cache, axes_tree(cspecs), mesh, rules)
+                x = jax.ShapeDtypeStruct((B, 1, d), jnp.bfloat16)
+                x_sh = arg_sharding((B, 1, d), x_axes, mesh, rules)
+
+                if encdec_dec:
+                    Hkv, hd = cfg.n_kv_heads, cfg.hd
+                    xkv_specs = {
+                        "k": PSpec((B, Hkv, cfg.enc_seq, hd),
+                                   ("cache_batch", "kv_heads", None, None),
+                                   init="zeros"),
+                        "v": PSpec((B, Hkv, cfg.enc_seq, hd),
+                                   ("cache_batch", "kv_heads", None, None),
+                                   init="zeros")}
+                    xkv = abstract_params(xkv_specs)
+                    xkv_sh = shard_like(xkv, axes_tree(xkv_specs), mesh,
+                                        rules)
+
+                    def decode_block(bp, cache, xkv, x):
+                        dp, xp = bp
+                        body = make_decode_body(cfg, kinds, jnp.int32(7))
+                        return body(x, (dp, cache, xp, xkv))
+
+                    fn = jax.jit(decode_block,
+                                 in_shardings=(bp_sh, c_sh, xkv_sh, x_sh))
+                    args = (bp, cache, xkv, x)
+                else:
+                    def decode_block(bp, cache, x):
+                        body = make_decode_body(cfg, kinds, jnp.int32(7))
+                        return body(x, (bp, cache))
+
+                    fn = jax.jit(decode_block,
+                                 in_shardings=(bp_sh, c_sh, x_sh))
+                    args = (bp, cache, x)
+
+            t0 = time.perf_counter()
+            lowered = fn.lower(*args)
+            res.lower_s = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            compiled = lowered.compile()
+            res.compile_s = time.perf_counter() - t0
+            res.memory = _memory_dict(compiled)
+            res.cost = _cost_dict(compiled)
+            try:
+                hlo = compiled.as_text()
+            except Exception:
+                hlo = lowered.as_text()
+            res.collectives = collective_bytes(hlo)
+    except Exception as e:
+        res.status = "failed"
+        res.reason = f"{type(e).__name__}: {e}"
+    return res
+
+
+__all__ = ["lower_cell", "lower_block_cell", "CellResult",
+           "collective_bytes", "rules_for_arch", "batch_axes"]

@@ -1,0 +1,103 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver (deliverable e).
+
+Lowers + compiles every (architecture × input shape) cell on the
+production meshes — (16, 16) single pod and (2, 16, 16) multi-pod — and
+records memory_analysis / cost_analysis / collective schedule per cell.
+
+The XLA flag above MUST precede every other import (jax locks the device
+count at first init); smoke tests and benches never import this module.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                 # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-32b \
+      --shape train_4k --multi-pod
+  PYTHONPATH=src python -m repro.launch.dryrun --out results.json
+"""
+
+import argparse
+import json
+import sys
+import time
+
+from repro.configs import ARCHS, SHAPES
+from repro.launch.cells import lower_cell
+from repro.runtime.train import TrainConfig
+
+
+def run(args) -> int:
+    archs = [args.arch] if args.arch else sorted(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = ([True] if args.multi_pod else
+              [False] if args.single_pod else [False, True])
+
+    from repro.configs import get_config
+    from repro.launch.cells import lower_block_cell
+
+    results = []
+    failed = 0
+    for multi_pod in meshes:
+        for arch in archs:
+            for shape in shapes:
+                t0 = time.perf_counter()
+                tcfg = TrainConfig(microbatches=args.microbatches)
+                overrides = json.loads(args.rules) if args.rules else None
+                res = lower_cell(
+                    arch, shape, multi_pod=multi_pod, tcfg=tcfg,
+                    remat=args.remat or None,
+                    logits_dtype=args.logits_dtype or None,
+                    rules_overrides=overrides)
+                rec = res.to_json()
+                # block-level cost lowering for scan-aware composition
+                if res.status == "ok" and not args.no_blocks:
+                    blk = lower_block_cell(
+                        arch, shape, multi_pod=multi_pod,
+                        remat=args.remat or None, rules_overrides=overrides)
+                    rec["block"] = blk.to_json()
+                    if get_config(arch).is_encdec:
+                        enc = lower_block_cell(
+                            arch, shape, multi_pod=multi_pod, part="encoder",
+                            remat=args.remat or None,
+                            rules_overrides=overrides)
+                        rec["enc_block"] = enc.to_json()
+                rec["wall_s"] = time.perf_counter() - t0
+                results.append(rec)
+                ok = res.status
+                mem = res.memory.get("temp_size_in_bytes", 0) / 2**30
+                flops = res.cost.get("flops", 0)
+                coll = res.collectives.get("total_bytes", 0) / 2**30
+                print(f"[{res.mesh}] {arch:26s} {shape:12s} {ok:8s} "
+                      f"lower={res.lower_s:6.1f}s compile={res.compile_s:6.1f}s "
+                      f"temp={mem:7.2f}GiB flops/dev={flops:.3e} "
+                      f"coll={coll:7.2f}GiB {res.reason[:90]}",
+                      flush=True)
+                if res.status == "failed":
+                    failed += 1
+                if args.out:
+                    with open(args.out, "w") as f:
+                        json.dump(results, f, indent=1)
+    print(f"\n{len(results)} cells, {failed} failed", flush=True)
+    return 1 if failed else 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="")
+    ap.add_argument("--shape", default="")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-pod", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=0,
+                    help="0 = auto (machine-model default)")
+    ap.add_argument("--remat", default="")
+    ap.add_argument("--logits-dtype", default="")
+    ap.add_argument("--rules", default="", help="JSON rules overrides")
+    ap.add_argument("--no-blocks", action="store_true",
+                    help="skip block-level cost lowering")
+    ap.add_argument("--out", default="")
+    sys.exit(run(ap.parse_args()))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Production mesh builders.
+
+Functions (not module constants) so importing never touches jax device
+state.  The production target is TPU v5e pods: 16×16 = 256 chips per
+pod; the multi-pod mesh adds a leading "pod" axis (2 pods = 512 chips,
+pod axis crossing DCI).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh(devices=None):
+    """Tiny mesh over whatever devices exist (tests)."""
+
+    devices = devices if devices is not None else jax.devices()
+    n = len(devices)
+    dp = max(1, n // 2)
+    tp = n // dp
+    import numpy as np
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(devices[:dp * tp]).reshape(dp, tp),
+                ("data", "model"))
+
+
+__all__ = ["make_production_mesh", "make_smoke_mesh"]

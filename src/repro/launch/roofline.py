@@ -1,0 +1,176 @@
+"""Roofline analysis (deliverable g) over dry-run records.
+
+Per (arch × shape × mesh) cell:
+
+    compute_term    = flops_per_device / PEAK_FLOPS
+    memory_term     = hbm_bytes_per_device / HBM_BW
+    collective_term = collective_bytes_per_device / (LINKS × LINK_BW)
+
+Hardware constants (TPU v5e, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI with 4 links usable per chip in a 2-D torus (we charge
+the *sum over collective payloads traversing the chip's links*, i.e.
+bytes / (links × bw) — a deliberately simple model, same spirit as the
+paper's GMT ratio).
+
+Scan-aware composition: XLA cost analysis counts a while body once, so
+totals are ``module + (trips − 1) × block`` using the block-level
+lowering shipped alongside every cell record (and ``enc_block`` with its
+own trip count for the enc-dec arch).
+
+MODEL_FLOPS = 6·N·D for dense training (N params, D tokens), 6·N_active·D
+for MoE, 2·N·D for pure forward (prefill), 2·N_active·B for one decode
+step.  The ratio MODEL_FLOPS / HLO_FLOPS measures how much compiled
+compute is "useful" — remat recompute, attention (excluded from 6ND by
+convention), MoE dispatch and padding all show up here.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from typing import Any
+
+from ..configs import SHAPES, get_config
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+LINKS = 4                    # usable links per chip (2-D torus)
+
+
+def active_params(arch: str) -> int:
+    """Parameters touched per token (MoE: top-k experts + shared)."""
+
+    cfg = get_config(arch)
+    from ..models.api import build_model
+    total = build_model(cfg).param_count()
+    if cfg.moe is None:
+        return total
+    m = cfg.moe
+    # expert params per MoE layer
+    per_expert = 3 * cfg.d_model * cfg.d_ff
+    n_moe_layers = cfg.n_layers // m.every
+    expert_total = n_moe_layers * m.num_experts * per_expert
+    expert_active = n_moe_layers * m.top_k * per_expert
+    return total - expert_total + expert_active
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_act = active_params(arch)
+    if shape.kind == "train":
+        D = shape.global_batch * shape.seq_len
+        return 6.0 * n_act * D
+    if shape.kind == "prefill":
+        D = shape.global_batch * shape.seq_len
+        return 2.0 * n_act * D
+    # decode: one token per sequence
+    return 2.0 * n_act * shape.global_batch
+
+
+def _scaled(rec: dict, key_path: tuple[str, ...], trips_minus_1_blocks:
+            list[tuple[dict, int]]) -> float:
+    def get(d, path):
+        for k in path:
+            d = d.get(k, {}) if isinstance(d, dict) else {}
+        return d if isinstance(d, (int, float)) else 0.0
+
+    total = get(rec, key_path)
+    for blk, extra_trips in trips_minus_1_blocks:
+        total += extra_trips * get(blk, key_path)
+    return total
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    status: str
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    dominant: str = ""
+    hlo_flops_per_dev: float = 0.0
+    hbm_bytes_per_dev: float = 0.0
+    coll_bytes_per_dev: float = 0.0
+    model_flops: float = 0.0
+    useful_ratio: float = 0.0
+    peak_hbm_gib: float = 0.0
+    step_time_s: float = 0.0          # max of the three terms
+    mfu: float = 0.0                  # model_flops/(devices*peak*step_time)
+    note: str = ""
+
+    def row(self) -> str:
+        return (f"| {self.arch} | {self.shape} | {self.mesh} | "
+                f"{self.compute_s*1e3:.2f} | {self.memory_s*1e3:.2f} | "
+                f"{self.collective_s*1e3:.2f} | {self.dominant} | "
+                f"{self.useful_ratio:.2f} | {self.mfu*100:.1f}% |")
+
+
+def analyze(rec: dict) -> Roofline:
+    r = Roofline(arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+                 status=rec["status"])
+    if rec["status"] != "ok":
+        r.note = rec.get("reason", "")
+        return r
+
+    comp = []
+    blk = rec.get("block")
+    if blk and blk.get("status") == "ok":
+        comp.append((blk, max(0, blk["settings"]["trips"] - 1)))
+    enc = rec.get("enc_block")
+    if enc and enc.get("status") == "ok":
+        comp.append((enc, max(0, enc["settings"]["trips"] - 1)))
+
+    n_dev = rec.get("n_devices", 256)
+    r.hlo_flops_per_dev = _scaled(rec, ("cost", "flops"), comp)
+    r.hbm_bytes_per_dev = _scaled(rec, ("cost", "bytes_accessed"), comp)
+    coll_total = _scaled(rec, ("collectives", "total_bytes"), comp)
+    # HLO shapes inside an SPMD module are per-device shards already.
+    r.coll_bytes_per_dev = coll_total
+
+    r.compute_s = r.hlo_flops_per_dev / PEAK_FLOPS
+    r.memory_s = r.hbm_bytes_per_dev / HBM_BW
+    r.collective_s = r.coll_bytes_per_dev / (LINKS * LINK_BW)
+    terms = {"compute": r.compute_s, "memory": r.memory_s,
+             "collective": r.collective_s}
+    r.dominant = max(terms, key=terms.get)
+    r.step_time_s = max(terms.values())
+
+    r.model_flops = model_flops(rec["arch"], rec["shape"])
+    total_hlo = r.hlo_flops_per_dev * n_dev
+    r.useful_ratio = r.model_flops / total_hlo if total_hlo else 0.0
+    if r.step_time_s > 0:
+        r.mfu = r.model_flops / (n_dev * PEAK_FLOPS * r.step_time_s)
+    r.peak_hbm_gib = rec.get("memory", {}).get("peak_hbm_bytes", 0) / 2**30
+    return r
+
+
+def analyze_file(path: str) -> list[Roofline]:
+    with open(path) as f:
+        records = json.load(f)
+    return [analyze(rec) for rec in records]
+
+
+def what_moves_it(r: Roofline) -> str:
+    """One-sentence lever on the dominant term (per-cell heuristic)."""
+
+    if r.dominant == "compute":
+        if r.useful_ratio < 0.5:
+            return ("compute is mostly non-model work (remat/attention/"
+                    "dispatch): relax remat policy or cut dispatch/"
+                    "mask overheads")
+        return "compute-bound at high useful ratio: already near roofline"
+    if r.dominant == "memory":
+        return ("HBM-bound: raise arithmetic intensity — bigger per-device "
+                "batch, fuse CE/softmax, drop f32 intermediates")
+    return ("collective-bound: reshard to cut the dominant collective "
+            "(FSDP vs TP trade, gradient compression on the pod axis, "
+            "overlap via microbatching)")
+
+
+__all__ = ["analyze", "analyze_file", "Roofline", "model_flops",
+           "active_params", "what_moves_it", "PEAK_FLOPS", "HBM_BW",
+           "LINK_BW", "LINKS"]

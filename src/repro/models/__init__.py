@@ -1,0 +1,6 @@
+"""Architecture zoo: unified transformer / SSD / MoE / hybrid / enc-dec
+stacks with PSpec parameter declarations and logical sharding axes."""
+
+from .api import ModelAPI, build_model
+
+__all__ = ["ModelAPI", "build_model"]

@@ -1,0 +1,260 @@
+"""Unified model API: init / abstract params / loss / decode, per arch.
+
+``build_model(cfg)`` returns a :class:`ModelAPI` whose functions are pure
+(params-first) and jit/pjit-friendly:
+
+* ``loss(params, batch)``          — train/prefill forward + CE loss
+* ``forward(params, batch)``       — logits (prefill benchmark form)
+* ``decode_state_specs(B, ctx)``   — per-arch decode state as PSpec tree
+  (KV ring caches, SSM states, static encoder/image cross-K/V)
+* ``decode_step(params, state, tokens)`` — one-token serve step
+
+Decode state is a pytree with a stacked leading blocks dim, scanned in
+lock-step with the stacked block params.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeSpec
+from ..distribute.sharding import logical_constraint as lc
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .common import (PSpec, abstract_params, axes_tree, init_params,
+                     rms_norm, stack_specs)
+from .transformer import (_block_plan, _logits, _sinusoid, forward_encdec,
+                          forward_lm, lm_loss, mlp_forward,
+                          stack_param_specs)
+
+
+def _cache_len(cfg: ArchConfig, context: int) -> int:
+    if cfg.window is not None:
+        return min(cfg.window, context)
+    return context
+
+
+@dataclass
+class ModelAPI:
+    cfg: ArchConfig
+    specs: dict = field(default_factory=dict)
+
+    def __post_init__(self):
+        if not self.specs:
+            self.specs = stack_param_specs(self.cfg)
+
+    # -- params ---------------------------------------------------------
+    def init(self, rng: jax.Array):
+        return init_params(self.specs, rng)
+
+    def abstract(self):
+        return abstract_params(self.specs)
+
+    def axes(self):
+        return axes_tree(self.specs)
+
+    def param_count(self) -> int:
+        import numpy as np
+        return int(sum(np.prod(s.shape) for s in
+                       jax.tree.leaves(self.specs,
+                                       is_leaf=lambda x: isinstance(x, PSpec))))
+
+    # -- train / prefill ---------------------------------------------------
+    def loss(self, params, batch) -> jax.Array:
+        return lm_loss(params, self.cfg, batch)
+
+    def forward(self, params, batch) -> jax.Array:
+        if self.cfg.is_encdec:
+            return forward_encdec(params, self.cfg, batch["tokens"],
+                                  batch["frames"])
+        return forward_lm(params, self.cfg, batch["tokens"],
+                          batch.get("img_embeds"))
+
+    # -- decode ---------------------------------------------------------
+    def decode_block_specs(self, batch: int, context: int) -> dict:
+        """Decode state of ONE block (unstacked) — also used by the
+        dry-run's block-level cost lowering."""
+
+        cfg = self.cfg
+        kinds, _ = _block_plan(cfg)
+        C = _cache_len(cfg, context)
+        per_block: dict[str, Any] = {}
+        for i, kind in enumerate(kinds):
+            entry: dict[str, Any] = {}
+            if kind in ("dense", "moe", "hybrid", "encoder"):
+                entry["kv"] = attn.kv_cache_specs(cfg, batch, C)
+            if kind in ("ssm", "hybrid"):
+                entry["ssm"] = ssm_mod.ssm_state_specs(cfg, batch)
+            if kind == "cross":
+                Hkv, hd = cfg.n_kv_heads, cfg.hd
+                entry["enc_kv"] = {
+                    "k": PSpec((batch, Hkv, cfg.n_img_tokens, hd),
+                               ("cache_batch", "kv_heads", None, None),
+                               init="zeros"),
+                    "v": PSpec((batch, Hkv, cfg.n_img_tokens, hd),
+                               ("cache_batch", "kv_heads", None, None),
+                               init="zeros")}
+            per_block[f"{i}_{kind}"] = entry
+        return per_block
+
+    def decode_state_specs(self, batch: int, context: int) -> dict:
+        cfg = self.cfg
+        _, n_blocks = _block_plan(cfg)
+        per_block = self.decode_block_specs(batch, context)
+        state: dict[str, Any] = {"blocks": stack_specs(per_block, n_blocks)}
+        if cfg.is_encdec:
+            Hkv, hd = cfg.n_kv_heads, cfg.hd
+            xkv = {"k": PSpec((batch, Hkv, cfg.enc_seq, hd),
+                              ("cache_batch", "kv_heads", None, None),
+                              init="zeros"),
+                   "v": PSpec((batch, Hkv, cfg.enc_seq, hd),
+                              ("cache_batch", "kv_heads", None, None),
+                              init="zeros")}
+            state["xattn"] = stack_specs(xkv, cfg.n_layers)
+        return state
+
+    def init_decode_state(self, batch: int, context: int):
+        return init_params(self.decode_state_specs(batch, context),
+                           jax.random.PRNGKey(0))
+
+    def decode_step(self, params, state, tokens: jax.Array,
+                    cur_len: jax.Array):
+        """tokens: (B, 1) -> (logits (B, V), new state)."""
+
+        cfg = self.cfg
+        kinds, _ = _block_plan(cfg)
+        x = jnp.take(params["embed"], tokens, axis=0)       # (B,1,d)
+        if cfg.is_encdec:
+            x = x + _sinusoid_at(cur_len, cfg.d_model, x.dtype)
+
+        body = make_decode_body(cfg, kinds, cur_len)
+
+        if cfg.is_encdec:
+            xs = (params["blocks"], state["blocks"],
+                  params["xattn_blocks"], state["xattn"])
+        else:
+            xs = (params["blocks"], state["blocks"])
+        x, new_blocks = jax.lax.scan(body, x, xs)
+        logits = _logits(params, cfg, x)[:, 0]
+        new_state = dict(state)
+        new_state["blocks"] = new_blocks
+        return logits, new_state
+
+    def encode_cross_kv(self, params, frames: jax.Array) -> dict:
+        """Enc-dec serving prefill: run the encoder and project per-layer
+        cross-attention K/V.  Returns {"k","v"}: (L, B, Hkv, enc_seq, hd)."""
+
+        cfg = self.cfg
+        assert cfg.is_encdec
+        from .transformer import _scan_blocks, _sinusoid
+        B, Senc, d = frames.shape
+        pos = jnp.broadcast_to(jnp.arange(Senc, dtype=jnp.int32), (B, Senc))
+        enc = frames + _sinusoid(Senc, d, frames.dtype)
+        enc = _scan_blocks(cfg, params["enc_blocks"], enc, pos, causal=False,
+                           kinds=["encoder"])
+        enc = rms_norm(enc, params["enc_ln_f"])
+
+        def one(xp):
+            k = jnp.einsum("bsd,dhk->bhsk", enc, xp["x"]["wk"])
+            v = jnp.einsum("bsd,dhk->bhsk", enc, xp["x"]["wv"])
+            if "k_norm" in xp["x"]:
+                from .common import rms_norm as _rn
+                k = _rn(k, xp["x"]["k_norm"])
+            return {"k": k, "v": v}
+
+        return jax.lax.map(one, params["xattn_blocks"])
+
+    # -- assigned-shape input specs ----------------------------------------
+    def input_specs(self, shape: ShapeSpec, *, reduced: bool = False) -> dict:
+        """ShapeDtypeStruct stand-ins for every model input of a shape
+        (the dry-run contract; no allocation)."""
+
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        if shape.kind in ("train", "prefill"):
+            out = {"tokens": tok, "labels": jax.ShapeDtypeStruct((B, S),
+                                                                 jnp.int32)}
+            if cfg.family == "vlm":
+                out["img_embeds"] = jax.ShapeDtypeStruct(
+                    (B, cfg.n_img_tokens, cfg.d_model), jnp.bfloat16)
+            if cfg.is_encdec:
+                out["frames"] = jax.ShapeDtypeStruct(
+                    (B, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+            return out
+        # decode: one new token + state of length S
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+                "state": abstract_params(self.decode_state_specs(B, S)),
+                "cur_len": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def make_decode_body(cfg: ArchConfig, kinds: list[str], cur_len: jax.Array):
+    """One decode block: the scan body of ``decode_step`` and the unit
+    lowered by the dry-run's block-cost analysis."""
+
+    def body(carry, scanned):
+        h = carry
+        if cfg.is_encdec:
+            bp, cache, xp, xkv = scanned
+        else:
+            bp, cache = scanned
+        new_cache = {}
+        for i, kind in enumerate(kinds):
+            key = f"{i}_{kind}"
+            p, c = bp[key], cache[key]
+            nc: dict[str, Any] = {}
+            hn = rms_norm(h, p["ln1"])
+            if kind in ("dense", "moe", "encoder"):
+                a, nc["kv"] = attn.decode_attention(
+                    p["attn"], cfg, hn, c["kv"], cur_len,
+                    window=cfg.window)
+                h = h + a
+            elif kind == "hybrid":
+                a, nc["kv"] = attn.decode_attention(
+                    p["attn"], cfg, hn, c["kv"], cur_len,
+                    window=cfg.window)
+                m, nc["ssm"] = ssm_mod.ssm_decode_step(
+                    p["ssm"], cfg, hn, c["ssm"])
+                h = h + p["mix"][0] * a + p["mix"][1] * m
+            elif kind == "ssm":
+                m, nc["ssm"] = ssm_mod.ssm_decode_step(
+                    p["ssm"], cfg, hn, c["ssm"])
+                h = h + m
+            elif kind == "cross":
+                a = attn.decode_cross_attention(p["xattn"], cfg, hn,
+                                                c["enc_kv"])
+                h = h + jnp.tanh(p["gate"]).astype(h.dtype) * a
+                nc["enc_kv"] = c["enc_kv"]
+            if "ffn" in p:
+                h2 = rms_norm(h, p["ln2"])
+                if kind == "moe":
+                    h = h + moe_mod.moe_forward(p["ffn"], cfg, h2)
+                else:
+                    h = h + mlp_forward(p["ffn"], cfg, h2)
+            new_cache[key] = nc
+        if cfg.is_encdec:
+            a = attn.decode_cross_attention(
+                xp["x"], cfg, rms_norm(h, xp["ln_x"]), xkv)
+            h = h + a
+        return h, new_cache
+
+    return body
+
+
+def _sinusoid_at(pos: jax.Array, d: int, dtype) -> jax.Array:
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos.astype(jnp.float32) / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1
+                           ).astype(dtype)[None]
+
+
+def build_model(cfg: ArchConfig) -> ModelAPI:
+    return ModelAPI(cfg)
+
+
+__all__ = ["ModelAPI", "build_model"]

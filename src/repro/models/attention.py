@@ -1,0 +1,231 @@
+"""GQA attention: qk-norm / qkv-bias / sliding-window / RoPE variants,
+full-sequence (train / prefill) and single-token cached decode paths.
+
+Pure-JAX math by default (XLA fuses this well on TPU); the Pallas flash
+kernel (`repro.kernels.flash_attention`) is an opt-in runtime path via
+``use_flash=True`` for TPU execution.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..distribute.sharding import logical_constraint as lc
+from .common import PSpec, rms_norm, rope
+
+NEG_INF = -1e30
+
+
+def attn_specs(cfg: ArchConfig, cross: bool = False) -> dict:
+    d, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    specs: dict[str, Any] = {
+        "wq": PSpec((d, H, hd), ("embed", "heads", None)),
+        "wk": PSpec((d, Hkv, hd), ("embed", "kv_heads", None)),
+        "wv": PSpec((d, Hkv, hd), ("embed", "kv_heads", None)),
+        "wo": PSpec((H, hd, d), ("heads", None, "embed")),
+    }
+    if cfg.qkv_bias and not cross:
+        specs["bq"] = PSpec((H, hd), ("heads", None), init="zeros")
+        specs["bk"] = PSpec((Hkv, hd), ("kv_heads", None), init="zeros")
+        specs["bv"] = PSpec((Hkv, hd), ("kv_heads", None), init="zeros")
+    if cfg.qk_norm:
+        specs["q_norm"] = PSpec((hd,), (None,), init="ones")
+        specs["k_norm"] = PSpec((hd,), (None,), init="ones")
+    return specs
+
+
+def _project_qkv(p: dict, cfg: ArchConfig, xq: jax.Array, xkv: jax.Array):
+    q = jnp.einsum("bsd,dhk->bhsk", xq, p["wq"])
+    k = jnp.einsum("bsd,dhk->bhsk", xkv, p["wk"])
+    v = jnp.einsum("bsd,dhk->bhsk", xkv, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"][None, :, None, :]
+        k = k + p["bk"][None, :, None, :]
+        v = v + p["bv"][None, :, None, :]
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    return q, k, v
+
+
+def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    if n_rep == 1:
+        return k
+    B, Hkv, S, hd = k.shape
+    return jnp.repeat(k, n_rep, axis=1)
+
+
+def _sdpa(q, k, v, mask, scale):
+    s = jnp.einsum("bhqk,bhsk->bhqs", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqs,bhsk->bhqk", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+# Above this query length, attention processes queries in chunks so the
+# f32 score tensor stays O(chunk·S) instead of O(S²) — the pure-JAX
+# flash-attention-lite used by 32k prefill/train (the Pallas kernel is
+# the TPU runtime path).  Chunk size is a tuning parameter.
+Q_CHUNK_THRESHOLD = 8192
+Q_CHUNK = 1024
+
+
+def _sdpa_qchunked(q, k, v, positions, scale, *, causal, window,
+                   chunk=Q_CHUNK):
+    B, H, S, hd = q.shape
+    nc = -(-S // chunk)
+    pad = nc * chunk - S
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    qs = q.reshape(B, H, nc, chunk, hd).transpose(2, 0, 1, 3, 4)
+    ki = positions[:, None, None, :]                    # (B,1,1,S)
+
+    def one(args):
+        i, qc = args
+        qi = (i * chunk + jnp.arange(chunk, dtype=jnp.int32)
+              )[None, None, :, None]
+        if causal:
+            m = ki <= qi
+            if window is not None:
+                m &= ki >= qi - window + 1
+        else:
+            m = jnp.ones((1, 1, 1, S), bool)
+        return _sdpa(qc, k, v, m, scale)
+
+    out = jax.lax.map(one, (jnp.arange(nc), qs))        # (nc,B,H,chunk,hd)
+    out = out.transpose(1, 2, 0, 3, 4).reshape(B, H, nc * chunk, hd)
+    return out[:, :, :S]
+
+
+def attention(p: dict, cfg: ArchConfig, x: jax.Array, positions: jax.Array,
+              *, causal: bool = True, window: int | None = None,
+              x_kv: jax.Array | None = None) -> jax.Array:
+    """Full-sequence attention.  ``x_kv`` switches to cross-attention
+    (no causal mask, no rope on kv positions beyond their own index)."""
+
+    B, S, d = x.shape
+    cross = x_kv is not None
+    xkv = x_kv if cross else x
+    q, k, v = _project_qkv(p, cfg, x, xkv)
+    if cfg.use_rope and not cross:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    k, v = _repeat_kv(k, n_rep), _repeat_kv(v, n_rep)
+    q = lc(q, "batch", "heads", "seq", None)
+    k = lc(k, "batch", "heads", "seq", None)
+
+    Skv = xkv.shape[1]
+    if (not cross) and causal and S > Q_CHUNK_THRESHOLD:
+        o = _sdpa_qchunked(q, k, v, positions, cfg.hd ** -0.5,
+                           causal=True, window=window)
+    else:
+        if cross or not causal:
+            mask = jnp.ones((1, 1, S, Skv), bool)
+        else:
+            qi = positions[:, None, :, None]           # (B,1,S,1)
+            ki = positions[:, None, None, :]           # (B,1,1,S)
+            mask = ki <= qi
+            if window is not None:
+                mask &= ki >= qi - window + 1
+        o = _sdpa(q, k, v, mask, cfg.hd ** -0.5)
+    o = lc(o, "batch", "heads", "seq", None)
+    out = jnp.einsum("bhsk,hkd->bsd", o, p["wo"])
+    return lc(out, "batch", "seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# Cached decode
+# ---------------------------------------------------------------------------
+
+
+def kv_cache_specs(cfg: ArchConfig, batch: int, cache_len: int) -> dict:
+    # cache_seq -> "model" keeps 32k caches shardable even when kv_heads
+    # do not divide the model axis (GQA kv=8 on 16-way TP); the axis
+    # dedup keeps whichever dim claims "model" first.
+    Hkv, hd = cfg.n_kv_heads, cfg.hd
+    return {
+        "k": PSpec((batch, Hkv, cache_len, hd),
+                   ("cache_batch", "kv_heads", "cache_seq", "head_dim"),
+                   init="zeros"),
+        "v": PSpec((batch, Hkv, cache_len, hd),
+                   ("cache_batch", "kv_heads", "cache_seq", "head_dim"),
+                   init="zeros"),
+    }
+
+
+def decode_attention(p: dict, cfg: ArchConfig, x: jax.Array, cache: dict,
+                     cur_len: jax.Array, *, window: int | None = None,
+                     x_kv_cache: dict | None = None) -> tuple[jax.Array, dict]:
+    """One-token attention against a KV cache.
+
+    x: (B, 1, d); cache["k"/"v"]: (B, Hkv, C, hd) where C is the cache
+    length (= window size for SWA — a ring buffer — else max context);
+    cur_len: scalar count of tokens already in the cache.  Keys are
+    stored post-RoPE.  Returns (output, updated cache)."""
+
+    B, one, d = x.shape
+    C = cache["k"].shape[2]
+    positions = jnp.full((B, 1), cur_len, jnp.int32)
+    q, k_new, v_new = _project_qkv(p, cfg, x, x)
+    if cfg.use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k_new = rope(k_new, positions, cfg.rope_theta)
+
+    slot = jnp.mod(cur_len, C)                    # ring for SWA
+    # one-hot masked update instead of dynamic_update_slice: elementwise,
+    # so it stays local under ANY cache sharding (dynamic updates on a
+    # sharded dim made GSPMD replicate the whole cache — §Perf cell B)
+    hot = (jnp.arange(C) == slot)[None, None, :, None]
+    k = jnp.where(hot, k_new.astype(cache["k"].dtype), cache["k"])
+    v = jnp.where(hot, v_new.astype(cache["v"].dtype), cache["v"])
+    new_cache = {"k": k, "v": v}
+
+    # validity: slot i last held absolute position cur_len - ((slot-i) mod C)
+    idx = jnp.arange(C)
+    if window is not None:
+        abs_pos = cur_len - jnp.mod(slot - idx, C)
+        valid = (abs_pos >= jnp.maximum(0, cur_len - window + 1)) & \
+                (abs_pos <= cur_len)
+    else:
+        valid = idx <= cur_len
+    mask = valid[None, None, None, :]
+
+    # grouped GQA attention: contract q head-groups against the kv-head
+    # cache directly — jnp.repeat's broadcast made GSPMD all-gather the
+    # whole cache per layer (§Perf cell B, 8 GiB/block)
+    B2, H, one, hd = q.shape
+    Hkv = k.shape[1]
+    g = H // Hkv
+    qg = q.reshape(B2, Hkv, g, hd).astype(jnp.float32) * cfg.hd ** -0.5
+    s = jnp.einsum("bkgd,bksd->bkgs", qg, k.astype(jnp.float32))
+    s = jnp.where(mask, s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    og = jnp.einsum("bkgs,bksd->bkgd", pr, v.astype(jnp.float32))
+    o = og.reshape(B2, H, 1, hd).astype(x.dtype)
+    out = jnp.einsum("bhsk,hkd->bsd", o, p["wo"])
+    return lc(out, "batch", "seq", "embed"), new_cache
+
+
+def decode_cross_attention(p: dict, cfg: ArchConfig, x: jax.Array,
+                           enc_kv: dict) -> jax.Array:
+    """Decode-time cross attention against precomputed encoder K/V."""
+
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"])
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"])
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    k, v = _repeat_kv(enc_kv["k"], n_rep), _repeat_kv(enc_kv["v"], n_rep)
+    mask = jnp.ones((1, 1, 1, k.shape[2]), bool)
+    o = _sdpa(q, k, v, mask, cfg.hd ** -0.5)
+    return jnp.einsum("bhsk,hkd->bsd", o, p["wo"])
+
+
+__all__ = ["attn_specs", "attention", "decode_attention", "kv_cache_specs",
+           "decode_cross_attention"]

@@ -1,0 +1,150 @@
+"""Mixture-of-Experts layer: token-choice top-k routing with capacity,
+scatter-based dispatch (MODEL_FLOPS-aligned, unlike one-hot GShard
+dispatch whose (T,E,C) tensors are quadratic in tokens).
+
+Sharding: expert weights carry ("experts", "embed", "expert_mlp") logical
+axes.  Rules decide expert parallelism ("experts" -> "model", llama4's
+128 experts) vs per-expert tensor parallelism ("expert_mlp" -> "model",
+mixtral's 8 × 16384).  The auto-tuner flips these — the arch-dependent
+tuning parameter of DESIGN.md §4.
+
+A reference one-hot einsum dispatch (``moe_forward_einsum``) validates
+the scatter path numerically on small shapes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..distribute.sharding import logical_constraint as lc
+from .common import PSpec
+
+
+def moe_specs(cfg: ArchConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    E = cfg.moe.num_experts
+    specs = {
+        "router": PSpec((d, E), ("embed", "experts"), dtype=jnp.float32),
+        "wg": PSpec((E, d, f), ("experts", "embed", "expert_mlp")),
+        "wu": PSpec((E, d, f), ("experts", "embed", "expert_mlp")),
+        "wd": PSpec((E, f, d), ("experts", "expert_mlp", "embed")),
+    }
+    if cfg.moe.shared_experts:
+        specs["shared_wg"] = PSpec((d, f), ("embed", "mlp"))
+        specs["shared_wu"] = PSpec((d, f), ("embed", "mlp"))
+        specs["shared_wd"] = PSpec((f, d), ("mlp", "embed"))
+    return specs
+
+
+def capacity(cfg: ArchConfig, tokens: int) -> int:
+    m = cfg.moe
+    c = int(m.top_k * tokens * m.capacity_factor / m.num_experts)
+    return max(8, -(-c // 8) * 8)  # pad to 8 for TPU-friendly shapes
+
+
+def _route(cfg: ArchConfig, p: dict, x2: jax.Array):
+    """x2: (T, d) -> gates (T, k) f32, idx (T, k) int32."""
+
+    logits = (x2.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+    k = cfg.moe.top_k
+    top, idx = jax.lax.top_k(logits, k)
+    gates = jax.nn.softmax(top, axis=-1)  # renormalize over the top-k
+    return gates, idx
+
+
+def moe_forward(p: dict, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    """x: (B, S, d) -> (B, S, d).
+
+    GShard-style *group-wise* dispatch with the batch row as the group:
+    tokens compete for expert capacity only within their own sequence, so
+    every dispatch tensor keeps the batch dim — shardable over the data
+    axes (a globally-flattened dispatch would force E·C·d to be
+    replicated per device; see EXPERIMENTS.md §Perf).  Scatter/gather
+    dispatch keeps HLO FLOPs at the model level (one-hot einsum dispatch
+    is quadratic in tokens)."""
+
+    B, S, d = x.shape
+    E, k = cfg.moe.num_experts, cfg.moe.top_k
+    C = capacity(cfg, S)                                  # per-row capacity
+    gates, idx = _route(cfg, p, x.reshape(B * S, d))
+    gates = gates.reshape(B, S, k)
+    idx = idx.reshape(B, S, k)
+
+    # rank of each (token, choice) within its expert, per row
+    flat_e = idx.reshape(B, S * k)                        # (B, S*k)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)   # (B, S*k, E)
+    pos = jnp.cumsum(onehot, axis=1) - onehot
+    my_pos = jnp.take_along_axis(
+        pos, flat_e[..., None], axis=2)[..., 0]           # (B, S*k)
+    keep = my_pos < C
+    slot = jnp.where(keep, flat_e * C + my_pos, E * C)    # E*C = trash row
+
+    x_rep = jnp.repeat(x, k, axis=1)                      # (B, S*k, d)
+    rows = jnp.arange(B)[:, None]
+    # scatter stays local per batch shard (slot indices are row-local);
+    # the reshard to expert sharding below IS the EP all-to-all
+    xd = jnp.zeros((B, E * C + 1, d), x.dtype).at[rows, slot].add(x_rep)
+    xd = lc(xd, "batch", None, "embed")
+    xd = xd[:, :E * C].reshape(B, E, C, d)
+    xd = lc(xd, "batch", "experts", None, "embed")
+
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", xd, p["wg"])) * \
+        jnp.einsum("becd,edf->becf", xd, p["wu"])
+    h = lc(h, "batch", "experts", None, "expert_mlp")
+    yo = jnp.einsum("becf,efd->becd", h, p["wd"])
+    yo = lc(yo, "batch", "experts", None, "embed")
+
+    flat = yo.reshape(B, E * C, d)
+    flat = lc(flat, "batch", None, "embed")   # combine all-to-all back
+    picked = jnp.take_along_axis(
+        flat, jnp.clip(slot, 0, E * C - 1)[..., None], axis=1)
+    picked = picked * (keep[..., None] *
+                       gates.reshape(B, S * k)[..., None]).astype(x.dtype)
+    y = picked.reshape(B, S, k, d).sum(axis=2)
+
+    if cfg.moe.shared_experts:
+        x2 = x.reshape(B * S, d)
+        y = y + ((jax.nn.silu(x2 @ p["shared_wg"]) * (x2 @ p["shared_wu"])
+                  ) @ p["shared_wd"]).reshape(B, S, d)
+    return lc(y, "batch", "seq", "embed")
+
+
+def moe_forward_einsum(p: dict, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    """GShard-style one-hot dispatch oracle (small shapes only); same
+    per-row capacity semantics as the scatter path."""
+
+    B, S, d = x.shape
+    E, k = cfg.moe.num_experts, cfg.moe.top_k
+    C = capacity(cfg, S)
+    gates, idx = _route(cfg, p, x.reshape(B * S, d))
+    gates = gates.reshape(B, S * k)
+    flat_e = idx.reshape(B, S * k)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=1) - onehot
+    my_pos = jnp.take_along_axis(pos, flat_e[..., None], axis=2)[..., 0]
+    keep = my_pos < C
+
+    # dispatch/combine tensors (B, S*k, E, C)
+    disp = (jax.nn.one_hot(flat_e, E)[..., None] *
+            jax.nn.one_hot(jnp.clip(my_pos, 0, C - 1), C)[:, :, None, :])
+    disp = disp * keep[..., None, None]
+
+    x_rep = jnp.repeat(x, k, axis=1)                     # (B, S*k, d)
+    xd = jnp.einsum("btec,btd->becd", disp.astype(x.dtype), x_rep)
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", xd, p["wg"])) * \
+        jnp.einsum("becd,edf->becf", xd, p["wu"])
+    yo = jnp.einsum("becf,efd->becd", h, p["wd"])
+    comb = disp * gates[..., None, None]
+    y = jnp.einsum("btec,becd->btd", comb.astype(x.dtype), yo)
+    y = y.reshape(B, S, k, d).sum(axis=2)
+
+    if cfg.moe.shared_experts:
+        x2 = x.reshape(B * S, d)
+        y = y + ((jax.nn.silu(x2 @ p["shared_wg"]) * (x2 @ p["shared_wu"])
+                  ) @ p["shared_wd"]).reshape(B, S, d)
+    return y
+
+
+__all__ = ["moe_specs", "moe_forward", "moe_forward_einsum", "capacity"]

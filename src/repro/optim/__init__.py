@@ -1,0 +1,9 @@
+"""Optimizer substrate."""
+
+from .adamw import (OptState, adamw_init, adamw_update, cosine_schedule,
+                    global_norm)
+from .compression import compress_int8, decompress_int8, ef_compress_grads
+
+__all__ = ["OptState", "adamw_init", "adamw_update", "cosine_schedule",
+           "global_norm", "compress_int8", "decompress_int8",
+           "ef_compress_grads"]

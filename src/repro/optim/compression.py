@@ -1,0 +1,73 @@
+"""Gradient compression for cross-pod reduction (distributed-optimization
+trick for 1000+ node scale).
+
+int8 block-quantization with error feedback: gradients are quantized to
+int8 with per-block f32 scales before the (slow, DCI-crossing) "pod"-axis
+all-reduce, and the quantization residual is carried to the next step
+(error feedback keeps SGD-style convergence).  The intra-pod ("data")
+reduction stays full precision.
+
+In the pjit train step this is expressed as quantize -> psum over 'pod'
+-> dequantize inside a shard_map over the pod axis; at dry-run level the
+win shows up as a 4x drop in pod-axis all-reduce bytes (bf16 -> int8
+payload accounting, §Perf).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def compress_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """-> (int8 values, f32 per-block scales). Works on any shape."""
+
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale[:, 0]
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array, shape: tuple[int, ...]
+                    ) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def ef_compress_grads(grads, residual):
+    """Error-feedback compression of a gradient pytree.
+
+    Returns (compressed-then-decompressed grads, new residual).  The
+    round-trip models exactly what the receiving pods see; the residual
+    (g + r) - Q(g + r) is added to the next step's gradient."""
+
+    if residual is None:
+        residual = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32),
+                                grads)
+
+    def one(g, r):
+        target = g.astype(jnp.float32) + r
+        q, s = compress_int8(target)
+        deq = decompress_int8(q, s, g.shape)
+        return deq.astype(g.dtype), target - deq
+
+    pairs = jax.tree.map(one, grads, residual)
+    new_g = jax.tree.map(lambda t: t[0], pairs,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_r = jax.tree.map(lambda t: t[1], pairs,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_g, new_r
+
+
+__all__ = ["compress_int8", "decompress_int8", "ef_compress_grads", "BLOCK"]

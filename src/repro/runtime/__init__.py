@@ -1,0 +1,10 @@
+"""Runtime: train step builder, fault-tolerant supervisor, serving."""
+
+from .loop import History, LoopConfig, SimulatedFailure, run_training
+from .serve import Request, Server
+from .train import (TrainConfig, TrainState, abstract_train_state,
+                    build_train_step, init_train_state)
+
+__all__ = ["History", "LoopConfig", "SimulatedFailure", "run_training",
+           "Request", "Server", "TrainConfig", "TrainState",
+           "abstract_train_state", "build_train_step", "init_train_state"]

@@ -1,0 +1,104 @@
+"""Train-step builder: grad accumulation (microbatching), AdamW,
+optional int8 error-feedback compression for pod-crossing gradients.
+
+The returned ``train_step(state, batch)`` is a pure function suitable for
+``jax.jit``/pjit; all distribution comes from shardings on its inputs +
+the logical constraints inside the model.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.api import ModelAPI
+from ..optim import (OptState, adamw_init, adamw_update, cosine_schedule,
+                     ef_compress_grads)
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 10_000
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    microbatches: int = 1          # gradient accumulation (tuning parameter)
+    compress_pod_grads: bool = False
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OptState
+    ef_residual: Any               # None unless compress_pod_grads
+
+
+def init_train_state(api: ModelAPI, rng: jax.Array, tcfg: TrainConfig
+                     ) -> TrainState:
+    params = api.init(rng)
+    residual = (jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                if tcfg.compress_pod_grads else None)
+    return TrainState(params, adamw_init(params), residual)
+
+
+def abstract_train_state(api: ModelAPI, tcfg: TrainConfig) -> TrainState:
+    """ShapeDtypeStruct train state for dry-run lowering."""
+
+    params = api.abstract()
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    opt = OptState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                   m=jax.tree.map(f32, params), v=jax.tree.map(f32, params))
+    residual = jax.tree.map(f32, params) if tcfg.compress_pod_grads else None
+    return TrainState(params, opt, residual)
+
+
+def _split_microbatches(batch: dict, m: int) -> dict:
+    def split(x):
+        B = x.shape[0]
+        assert B % m == 0, (B, m)
+        return x.reshape(m, B // m, *x.shape[1:])
+    return jax.tree.map(split, batch)
+
+
+def build_train_step(api: ModelAPI, tcfg: TrainConfig
+                     ) -> Callable[[TrainState, dict], tuple[TrainState, dict]]:
+    lr = cosine_schedule(tcfg.lr, tcfg.warmup, tcfg.total_steps)
+    grad_fn = jax.value_and_grad(api.loss)
+
+    def train_step(state: TrainState, batch: dict):
+        if tcfg.microbatches > 1:
+            mb = _split_microbatches(batch, tcfg.microbatches)
+
+            def acc(carry, one):
+                loss_sum, g_sum = carry
+                loss, g = grad_fn(state.params, one)
+                g_sum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_sum, g)
+                return (loss_sum + loss, g_sum), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 state.params)
+            (loss_sum, gsum), _ = jax.lax.scan(acc, (jnp.zeros(()), zeros), mb)
+            loss = loss_sum / tcfg.microbatches
+            grads = jax.tree.map(lambda g: g / tcfg.microbatches, gsum)
+        else:
+            loss, grads = grad_fn(state.params, batch)
+
+        residual = state.ef_residual
+        if tcfg.compress_pod_grads:
+            grads, residual = ef_compress_grads(grads, residual)
+
+        params, opt, metrics = adamw_update(
+            state.params, grads, state.opt, lr=lr,
+            weight_decay=tcfg.weight_decay, clip_norm=tcfg.clip_norm)
+        metrics = dict(metrics, loss=loss)
+        return TrainState(params, opt, residual), metrics
+
+    return train_step
+
+
+__all__ = ["TrainConfig", "TrainState", "init_train_state",
+           "abstract_train_state", "build_train_step"]

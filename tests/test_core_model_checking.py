@@ -1,0 +1,269 @@
+"""Core model-checking auto-tuner tests: runtime semantics, explorer,
+properties, bisection, swarm, sweep, counterexample validity."""
+
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+
+from repro.core import (
+    AutoTuner, Counterexample, NonTermination, OverTime, PlatformSpec,
+    WaveParams, build_model, explore, find_minimal_time, model_time,
+    model_time_jnp, replay, swarm_search, sweep_times, trace_satisfies,
+    wg_ts_space,
+)
+from repro.core.sweep import cex_oracle
+
+settings = hypothesis.settings(max_examples=20, deadline=None,
+                               suppress_health_check=list(hypothesis.HealthCheck))
+
+
+def sim_time(kind, size, NP, GMT, WG, TS, L=0):
+    spec = PlatformSpec(size=size, NP=NP, GMT=GMT, L=L, kind=kind,
+                        fixed_WG=WG, fixed_TS=TS)
+    m = build_model(spec)
+    r = explore(m, NonTermination().violates, schedule="por")
+    assert r.counterexample is not None, "model deadlocked"
+    return r.counterexample.globals["time"]
+
+
+# ---------------------------------------------------------------------------
+# simulator <-> wave model equivalence (the key semantic invariant)
+# ---------------------------------------------------------------------------
+
+@settings
+@hypothesis.given(
+    kind=st.sampled_from(["abstract", "minimum"]),
+    size_exp=st.integers(2, 4), np_exp=st.integers(1, 2),
+    gmt=st.sampled_from([2, 4, 8]), wg_exp=st.integers(0, 4),
+    ts_exp=st.integers(0, 4))
+def test_sim_equals_wave_model(kind, size_exp, np_exp, gmt, wg_exp, ts_exp):
+    size = 1 << size_exp
+    WG, TS = 1 << min(wg_exp, size_exp), 1 << min(ts_exp, size_exp)
+    NP = 1 << np_exp
+    got = sim_time(kind, size, NP, gmt, WG, TS)
+    want = model_time(WaveParams(size=size, NP=NP, GMT=gmt, kind=kind), WG, TS)
+    assert got == want
+
+
+def test_paper_table1_row1():
+    """Paper Table 1 row 1: size=8, TS=4, WG=4, 4 PEs -> model time 44."""
+
+    assert sim_time("abstract", 8, 4, 4, 4, 4) == 44
+    assert model_time(WaveParams(size=8, NP=4, GMT=4), 4, 4) == 44
+
+
+def test_interleaving_invariance_full_schedule():
+    """Model time is invariant under interleavings: exhaustive DFS over
+    all schedules reaches FIN only with a single time value."""
+
+    for kind in ("abstract", "minimum"):
+        spec = PlatformSpec(size=4, NP=2, GMT=2, kind=kind,
+                            fixed_WG=2, fixed_TS=2)
+        m = build_model(spec)
+        r = explore(m, NonTermination().violates, schedule="full",
+                    stop_on_first=False, collect_terminals=True,
+                    keep_trails=False, max_states=2_000_000)
+        assert not r.truncated
+        times = {t.globals["time"] for t in r.terminals if t.globals["FIN"]}
+        assert len(times) == 1
+
+
+def test_no_deadlocks_small_grid():
+    """Every configuration terminates (all terminals have FIN)."""
+
+    spec = PlatformSpec(size=8, NP=4, GMT=4, kind="minimum")
+    m = build_model(spec)
+    r = explore(m, lambda G: False, schedule="por", stop_on_first=False,
+                collect_terminals=True, keep_trails=False)
+    assert r.terminals, "no terminal states found"
+    assert all(t.globals["FIN"] for t in r.terminals)
+
+
+# ---------------------------------------------------------------------------
+# properties + counterexamples
+# ---------------------------------------------------------------------------
+
+def test_overtime_semantics():
+    p = OverTime(10)
+    assert p.violates({"FIN": True, "time": 10})
+    assert p.violates({"FIN": True, "time": 3})
+    assert not p.violates({"FIN": True, "time": 11})
+    assert not p.violates({"FIN": False, "time": 3})
+    assert trace_satisfies(p, [{"FIN": False, "time": 0},
+                               {"FIN": True, "time": 11}])
+    assert not trace_satisfies(p, [{"FIN": False, "time": 0},
+                                   {"FIN": True, "time": 9}])
+
+
+def test_counterexample_replay_validates():
+    """Step 4: the trail must replay through the model to the same FIN
+    state (SPIN trail-simulation analogue)."""
+
+    spec = PlatformSpec(size=8, NP=4, GMT=4, kind="abstract")
+    m = build_model(spec)
+    r = explore(m, OverTime(44).violates, schedule="por")
+    assert r.counterexample is not None
+    cex = Counterexample.from_terminal(r.counterexample)
+    assert cex.time <= 44
+    assert cex.validate(m)
+    assert set(cex.config) == {"WG", "TS"}
+
+
+def test_counterexample_respects_T():
+    spec = PlatformSpec(size=8, NP=4, GMT=4, kind="abstract")
+    m = build_model(spec)
+    # T below the minimum -> property holds, no counterexample
+    r = explore(m, OverTime(43).violates, schedule="por")
+    assert r.property_holds
+    assert r.counterexample is None
+
+
+# ---------------------------------------------------------------------------
+# bisection (Fig. 1)
+# ---------------------------------------------------------------------------
+
+def test_bisection_against_known_minimum():
+    wp = WaveParams(size=64, NP=4, GMT=4, kind="minimum")
+    oracle = cex_oracle(wp)
+    res = find_minimal_time(oracle, t_ini=10_000)
+    space = wg_ts_space(64)
+    truth = min(model_time(wp, c["WG"], c["TS"]) for c in space)
+    assert res.t_min == truth
+    assert res.witness.time == truth
+    # log records a refuted query at T_min - 1 (the termination condition)
+    assert any(T == res.t_min - 1 and not found
+               for T, found, _ in res.log.queries) or res.t_min == 0
+
+
+def test_bisection_grows_infeasible_t_ini():
+    wp = WaveParams(size=16, NP=4, GMT=4, kind="abstract")
+    oracle = cex_oracle(wp)
+    res = find_minimal_time(oracle, t_ini=1)  # infeasible start
+    space = wg_ts_space(16)
+    truth = min(model_time(wp, c["WG"], c["TS"]) for c in space)
+    assert res.t_min == truth
+
+
+@settings
+@hypothesis.given(size_exp=st.integers(2, 8), gmt=st.sampled_from([2, 4, 16]),
+                  kind=st.sampled_from(["abstract", "minimum"]))
+def test_bisection_property(size_exp, gmt, kind):
+    wp = WaveParams(size=1 << size_exp, NP=4, GMT=gmt, kind=kind)
+    oracle = cex_oracle(wp)
+    res = find_minimal_time(oracle, t_ini=model_time(wp, 1, 1))
+    truth = min(model_time(wp, c["WG"], c["TS"])
+                for c in wg_ts_space(1 << size_exp))
+    assert res.t_min == truth
+
+
+# ---------------------------------------------------------------------------
+# engines agree
+# ---------------------------------------------------------------------------
+
+def test_sweep_matches_exhaustive_enumeration():
+    wp = WaveParams(size=256, NP=8, GMT=4, L=3, kind="minimum", NU=4)
+    res = sweep_times(wp)
+    space = wg_ts_space(256)
+    for cfg, t in zip(space, res.times):
+        assert model_time(wp, cfg["WG"], cfg["TS"]) == int(t)
+
+
+def test_engines_agree_on_optimum():
+    spec = PlatformSpec(size=8, NP=4, GMT=4, kind="minimum")
+    tuner = AutoTuner(spec)
+    r_sweep = tuner.tune(engine="sweep")
+    r_swarm = tuner.tune(engine="swarm", n_walks=12, seed=1)
+    assert r_sweep.t_min == r_swarm.t_min
+    wp = WaveParams(size=8, NP=4, GMT=4, kind="minimum")
+    assert model_time(wp, **{k: r_sweep.best_config[k] for k in ("WG", "TS")}
+                      ) == r_sweep.t_min
+
+
+@pytest.mark.slow
+def test_explorer_engine_agrees():
+    spec = PlatformSpec(size=8, NP=4, GMT=4, kind="abstract")
+    tuner = AutoTuner(spec)
+    r_exp = tuner.tune(engine="explorer")
+    r_sweep = tuner.tune(engine="sweep")
+    assert r_exp.t_min == r_sweep.t_min == 44
+
+
+def test_swarm_counterexample_carries_config():
+    spec = PlatformSpec(size=16, NP=4, GMT=4, kind="minimum")
+    m = build_model(spec)
+    sr = swarm_search(m, n_walks=8, seed=2)
+    assert sr.best.config["WG"] >= 1 and sr.best.config["TS"] >= 1
+    wp = WaveParams(size=16, NP=4, GMT=4, kind="minimum")
+    assert model_time(wp, sr.best.config["WG"], sr.best.config["TS"]) \
+        == sr.t_min
+
+
+# ---------------------------------------------------------------------------
+# jnp twin
+# ---------------------------------------------------------------------------
+
+def test_model_time_jnp_matches_scalar():
+    wp = WaveParams(size=1024, NP=8, GMT=16, L=2, kind="minimum", NU=2)
+    space = wg_ts_space(1024)
+    arrs = space.to_arrays()
+    got = np.asarray(model_time_jnp(wp, arrs["WG"], arrs["TS"]))
+    for i, cfg in enumerate(space):
+        want = model_time(wp, cfg["WG"], cfg["TS"])
+        if want < 2**31:  # within int32 range of the default jnp dtype
+            assert got[i] == want
+
+
+def test_replay_rejects_bogus_trail():
+    spec = PlatformSpec(size=4, NP=2, GMT=2, kind="abstract",
+                        fixed_WG=2, fixed_TS=2)
+    m = build_model(spec)
+    with pytest.raises(ValueError):
+        replay(m, ("nonexistent-transition",))
+
+
+# ---------------------------------------------------------------------------
+# warp scheduling extension (paper §8 future work)
+# ---------------------------------------------------------------------------
+
+def test_warp_none_equals_full_warp():
+    """warp == NP (one warp) must equal the warp-free model."""
+
+    base = WaveParams(size=256, NP=16, GMT=8, kind="minimum")
+    one_warp = WaveParams(size=256, NP=16, GMT=8, kind="minimum", warp=16)
+    for WG in (4, 16, 64):
+        for TS in (2, 8):
+            assert model_time(base, WG, TS) == model_time(one_warp, WG, TS)
+
+
+def test_warp_latency_hiding_helps():
+    """Smaller warps (more resident warps) hide memory latency: time is
+    non-increasing as the warp size shrinks — the §8 hypothesis."""
+
+    times = []
+    for warp in (16, 8, 4, 2):
+        p = WaveParams(size=1024, NP=16, GMT=16, kind="minimum", warp=warp)
+        times.append(model_time(p, 16, 8))
+    assert all(b <= a for a, b in zip(times, times[1:]))
+    assert times[-1] < times[0]
+
+
+def test_warp_sweep_matches_scalar():
+    from repro.core.sweep import sweep_times
+    p = WaveParams(size=512, NP=16, GMT=16, kind="minimum", warp=4)
+    res = sweep_times(p)
+    for cfg, t in zip(wg_ts_space(512), res.times):
+        assert model_time(p, cfg["WG"], cfg["TS"]) == int(t)
+
+
+def test_branch_and_bound_engine():
+    """Ruys-style B&B ([11], the paper's cited future work) finds the
+    same optimum in one verification run, exploring fewer states than
+    the collect-all engine."""
+
+    for size, kind in [(8, "abstract"), (16, "minimum")]:
+        spec = PlatformSpec(size=size, NP=4, GMT=4, kind=kind)
+        rb = AutoTuner(spec).tune(engine="bnb")
+        rs = AutoTuner(spec).tune(engine="sweep")
+        assert rb.t_min == rs.t_min
+        assert rb.witness.validate(build_model(spec))

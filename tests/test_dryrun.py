@@ -1,0 +1,204 @@
+"""Dry-run machinery tests: sharding resolution, HLO collective parsing,
+scan trip-count semantics, cell lowering on small meshes, roofline math."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distribute.sharding import (Rules, arg_sharding, default_rules,
+                                       shard_like)
+from repro.launch.cells import collective_bytes, lower_cell, rules_for_arch
+from repro.launch.roofline import analyze, model_flops
+
+SRC = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+
+
+def small_mesh():
+    dev = np.asarray(jax.devices()[:1]).reshape(1, 1)
+    return Mesh(dev, ("data", "model"))
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+
+def test_rules_spec_dedups_axes():
+    r = Rules.make(batch=("data",), embed=("data",), mlp="model")
+    spec = r.spec(("batch", "seq", "embed"))
+    assert spec == P(("data",), None, None) or spec == P("data", None, None)
+
+
+def test_arg_sharding_divisibility_fallback():
+    mesh = small_mesh()
+    r = default_rules()
+    # 1-ways always divide; use a fake 16-way sizes check via the rule
+    # logic instead: non-divisible heads fall back to embed
+    sh = arg_sharding((2560, 20, 128), ("embed", "heads", None), mesh, r)
+    assert sh.spec[0] is not None          # embed got the batch axes
+
+
+def test_arg_sharding_prefers_canonical_rule():
+    dev = np.asarray(jax.devices() * 1).reshape(1, 1)
+    mesh = Mesh(dev, ("data", "model"))
+    r = default_rules()
+    sh = arg_sharding((4096, 32, 128), ("embed", "heads", None), mesh, r)
+    # with 1-sized axes everything divides; heads keeps "model"
+    assert sh.spec[1] == "model"
+
+
+def test_rules_for_arch_moe_fallback():
+    from repro.configs import get_config
+    r8 = rules_for_arch(get_config("mixtral-8x22b"))
+    assert r8.get("experts") is None and r8.get("expert_mlp") == "model"
+    r128 = rules_for_arch(get_config("llama4-maverick-400b-a17b"))
+    assert r128.get("experts") == "model"
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+SAMPLE_HLO = """
+  %ar = f32[16000,4096]{1,0} all-reduce(%x), replica_groups={}
+  %ag.1 = bf16[256,1024]{1,0} all-gather(%y), dimensions={0}
+  %rs = (f32[128]{0}, f32[128]{0}) reduce-scatter(%a, %b), dimensions={0}
+  %cp = u32[64]{0} collective-permute(%z), source_target_pairs={{0,1}}
+  %a2a = s8[32,32]{1,0} all-to-all(%w), dimensions={1}
+  %ar2 = f32[10]{0} all-reduce-start(%q), replica_groups={}
+  %not_a_collective = f32[5]{0} add(%p, %q)
+"""
+
+
+def test_collective_bytes_parser():
+    out = collective_bytes(SAMPLE_HLO)
+    assert out["all-reduce"]["count"] == 2
+    assert out["all-reduce"]["bytes"] == 16000 * 4096 * 4 + 10 * 4
+    assert out["all-gather"]["bytes"] == 256 * 1024 * 2
+    assert out["reduce-scatter"]["bytes"] == 2 * 128 * 4
+    assert out["collective-permute"]["bytes"] == 64 * 4
+    assert out["all-to-all"]["bytes"] == 32 * 32
+    assert out["total_bytes"] == sum(
+        v["bytes"] for k, v in out.items() if isinstance(v, dict))
+
+
+# ---------------------------------------------------------------------------
+# scan trip-count semantics (the composition premise)
+# ---------------------------------------------------------------------------
+
+def test_cost_analysis_counts_scan_body_once():
+    def f(x, ws):
+        y, _ = jax.lax.scan(lambda c, w: (c @ w, None), x, ws)
+        return y.sum()
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((10, 64, 64), jnp.float32)
+    scan_flops = jax.jit(f).lower(x, ws).compile().cost_analysis()["flops"]
+
+    def g(x, ws):
+        y = x
+        for i in range(10):
+            y = y @ ws[i]
+        return y.sum()
+
+    unrolled = jax.jit(g).lower(x, ws).compile().cost_analysis()["flops"]
+    assert scan_flops < unrolled / 5     # body counted ~once, not 10x
+    # composition: module + (trips-1) * body ~= unrolled
+    body = 2 * 64 ** 3
+    assert abs((scan_flops + 9 * body) - unrolled) / unrolled < 0.05
+
+
+# ---------------------------------------------------------------------------
+# cell lowering on an in-process 1x1 mesh
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_lower_cell_smollm_train_on_tiny_mesh():
+    res = lower_cell("smollm-135m", "train_4k", mesh=small_mesh())
+    assert res.status == "ok", res.reason
+    assert res.cost.get("flops", 0) > 0
+    assert res.memory.get("temp_size_in_bytes", 0) > 0
+
+
+@pytest.mark.slow
+def test_lower_cell_decode_on_tiny_mesh():
+    res = lower_cell("smollm-135m", "decode_32k", mesh=small_mesh())
+    assert res.status == "ok", res.reason
+
+
+def test_lower_cell_skips_long500k_for_full_attention():
+    res = lower_cell("minitron-8b", "long_500k", mesh=small_mesh())
+    assert res.status == "skipped"
+    assert "sub-quadratic" in res.reason
+
+
+# ---------------------------------------------------------------------------
+# multi-device subprocess (8 host devices, 2x4 mesh)
+# ---------------------------------------------------------------------------
+
+SUBPROC = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax
+from jax.sharding import Mesh
+from repro.launch.cells import lower_cell
+mesh = Mesh(np.asarray(jax.devices()).reshape(2, 4), ("data", "model"))
+res = lower_cell("smollm-135m", "train_4k", mesh=mesh)
+assert res.status == "ok", res.reason
+assert res.collectives.get("total_bytes", 0) > 0, "expected collectives"
+print("SUBPROC_OK", res.cost.get("flops"))
+"""
+
+
+@pytest.mark.slow
+def test_lower_cell_multi_device_subprocess():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", SUBPROC], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert "SUBPROC_OK" in out.stdout, out.stdout + out.stderr
+
+
+# ---------------------------------------------------------------------------
+# roofline math
+# ---------------------------------------------------------------------------
+
+def test_roofline_composition():
+    rec = {
+        "arch": "smollm-135m", "shape": "train_4k", "mesh": "16x16",
+        "status": "ok", "n_devices": 256,
+        "cost": {"flops": 1e12, "bytes_accessed": 1e9},
+        "collectives": {"total_bytes": 4e9},
+        "memory": {"peak_hbm_bytes": 2 ** 30},
+        "block": {"status": "ok", "settings": {"trips": 30},
+                  "cost": {"flops": 5e11, "bytes_accessed": 1e8},
+                  "collectives": {"total_bytes": 3e9}},
+    }
+    r = analyze(rec)
+    assert r.hlo_flops_per_dev == pytest.approx(1e12 + 29 * 5e11)
+    assert r.coll_bytes_per_dev == pytest.approx(4e9 + 29 * 3e9)
+    assert r.dominant in ("compute", "memory", "collective")
+    assert 0 < r.useful_ratio < 1.0
+    assert r.step_time_s == max(r.compute_s, r.memory_s, r.collective_s)
+
+
+def test_model_flops_moe_uses_active_params():
+    dense = model_flops("minitron-8b", "train_4k")
+    assert dense > 0
+    from repro.launch.roofline import active_params
+    from repro.models.api import build_model
+    from repro.configs import get_config
+    total = build_model(get_config("mixtral-8x22b")).param_count()
+    act = active_params("mixtral-8x22b")
+    assert act < total * 0.45       # top-2 of 8 experts + attention
+
+
+def test_model_flops_decode_is_per_token():
+    f_train = model_flops("minitron-8b", "train_4k")
+    f_dec = model_flops("minitron-8b", "decode_32k")
+    assert f_dec < f_train / 1000

@@ -1,0 +1,85 @@
+"""Elastic rescale: train sharded on a (4,2) mesh, checkpoint, restore
+onto a (2,4) mesh, continue — loss curve must continue seamlessly.
+Runs in a subprocess (needs 8 host devices before jax init)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh
+from repro.configs import get_config
+from repro.configs.base import ShapeSpec
+from repro.data import SyntheticLM
+from repro.models import build_model
+from repro.runtime import TrainConfig, build_train_step, init_train_state
+from repro.distribute.sharding import use_mesh, shard_like, default_rules
+from repro.checkpoint import save_checkpoint, load_checkpoint
+from repro.models.common import axes_tree
+from repro.optim.adamw import OptState
+from repro.runtime.train import TrainState
+
+cfg = get_config("smollm-135m").reduced()
+api = build_model(cfg)
+tcfg = TrainConfig(lr=3e-3, warmup=2, total_steps=20)
+shape = ShapeSpec("t", 32, 8, "train")
+data = SyntheticLM(cfg, shape)
+rules = default_rules()
+
+def state_axes():
+    ax = api.axes()
+    return TrainState(params=ax, opt=OptState(step=(), m=ax, v=ax),
+                      ef_residual=None)
+
+def make_step(mesh):
+    st_template = init_train_state(api, jax.random.PRNGKey(0), tcfg)
+    st_sh = shard_like(st_template, state_axes(), mesh, rules)
+    step = jax.jit(build_train_step(api, tcfg))
+    return step, st_sh, st_template
+
+def place(state_host, st_sh):
+    return jax.tree.map(lambda x, s: jax.device_put(np.asarray(x), s),
+                        state_host, st_sh)
+
+losses = []
+# phase 1: (4,2) mesh
+mesh1 = Mesh(np.asarray(jax.devices()).reshape(4, 2), ("data", "model"))
+with use_mesh(mesh1, rules):
+    step, st_sh, state = make_step(mesh1)
+    state = place(state, st_sh)
+    for i in range(4):
+        state, m = step(state, data.batch(i))
+        losses.append(float(m["loss"]))
+    save_checkpoint("/tmp/elastic_ckpt", 4, state)
+
+# phase 2: elastic rescale onto (2,4)
+mesh2 = Mesh(np.asarray(jax.devices()).reshape(2, 4), ("data", "model"))
+with use_mesh(mesh2, rules):
+    step2, st_sh2, template = make_step(mesh2)
+    restored, manifest = load_checkpoint("/tmp/elastic_ckpt", template)
+    assert manifest["step"] == 4
+    state2 = place(restored, st_sh2)
+    for i in range(4, 8):
+        state2, m = step2(state2, data.batch(i))
+        losses.append(float(m["loss"]))
+
+assert all(np.isfinite(losses)), losses
+# loss continues from where it was (no re-warm spike > 25%)
+assert losses[4] < losses[0] * 1.25, losses
+print("ELASTIC_OK", " ".join(f"{l:.3f}" for l in losses))
+"""
+
+
+@pytest.mark.slow
+def test_elastic_rescale_subprocess():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=1200)
+    assert "ELASTIC_OK" in out.stdout, out.stdout[-2000:] + out.stderr[-3000:]

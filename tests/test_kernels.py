@@ -1,0 +1,182 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracles,
+swept over shapes/dtypes + hypothesis property tests."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import attention_ref, flash_attention
+from repro.kernels.matmul_tuned.ops import matmul_ref, matmul_tuned
+from repro.kernels.tuned_reduction.ops import reduce_1d, reduce_ref
+
+settings = hypothesis.settings(max_examples=25, deadline=None,
+                               suppress_health_check=list(hypothesis.HealthCheck))
+
+
+# ---------------------------------------------------------------------------
+# tuned_reduction
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.int32, jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n", [1, 100, 128 * 8, 128 * 8 * 3 + 17, 100_000])
+@pytest.mark.parametrize("op", ["min", "max"])
+def test_reduce_matches_ref(dtype, n, op):
+    rng = np.random.default_rng(hash((n, op)) % 2**32)
+    x = jnp.asarray(rng.standard_normal(n) * 100, dtype)
+    got = reduce_1d(x, op=op, block_rows=16)
+    want = reduce_ref(x, op)
+    assert got.dtype == want.dtype
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("block_rows", [8, 16, 64, 256])
+def test_reduce_block_size_invariance(block_rows):
+    """Tuning parameter must not change the result (the invariant the
+    paper's auto-tuning relies on)."""
+
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.integers(-2**30, 2**30, size=12_345), jnp.int32)
+    got = reduce_1d(x, op="min", block_rows=block_rows)
+    assert int(got) == int(reduce_ref(x, "min"))
+
+
+@settings
+@hypothesis.given(n=st.integers(1, 5000), seed=st.integers(0, 2**31),
+                  op=st.sampled_from(["min", "max", "sum"]))
+def test_reduce_property(n, seed, op):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(-10**6, 10**6, size=n), jnp.int32)
+    got = reduce_1d(x, op=op, block_rows=8)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(reduce_ref(x, op)))
+
+
+# ---------------------------------------------------------------------------
+# matmul_tuned
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-3), (jnp.bfloat16, 5e-2)])
+@pytest.mark.parametrize("shape", [(128, 128, 128), (256, 384, 512),
+                                   (512, 128, 256)])
+def test_matmul_matches_ref(dtype, tol, shape):
+    M, N, K = shape
+    rng = np.random.default_rng(hash(shape) % 2**32)
+    a = jnp.asarray(rng.standard_normal((M, K)), dtype)
+    b = jnp.asarray(rng.standard_normal((K, N)), dtype)
+    got = matmul_tuned(a, b, bm=128, bn=128, bk=128)
+    want = matmul_ref(a, b)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol * K ** 0.5)
+
+
+@pytest.mark.parametrize("blocks", [(128, 128, 128), (256, 128, 256),
+                                    (128, 256, 512)])
+def test_matmul_block_invariance(blocks):
+    bm, bn, bk = blocks
+    rng = np.random.default_rng(3)
+    a = jnp.asarray(rng.standard_normal((256, 512)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((512, 256)), jnp.float32)
+    got = matmul_tuned(a, b, bm=bm, bn=bn, bk=bk)
+    want = matmul_ref(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3,
+                               atol=5e-2)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5), (jnp.bfloat16, 2e-2)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_matches_ref(dtype, tol, causal):
+    rng = np.random.default_rng(11)
+    B, H, S, D = 2, 2, 256, 64
+    q, k, v = (jnp.asarray(rng.standard_normal((B, H, S, D)), dtype)
+               for _ in range(3))
+    got = flash_attention(q, k, v, causal=causal, block_q=128, block_k=128)
+    want = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=tol,
+                               atol=tol * 10)
+
+
+@pytest.mark.parametrize("window", [32, 100, 256])
+def test_flash_sliding_window(window):
+    rng = np.random.default_rng(13)
+    B, H, S, D = 1, 2, 256, 64
+    q, k, v = (jnp.asarray(rng.standard_normal((B, H, S, D)), jnp.float32)
+               for _ in range(3))
+    got = flash_attention(q, k, v, causal=True, window=window,
+                          block_q=64, block_k=64)
+    want = attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-4)
+
+
+@pytest.mark.parametrize("bq,bk", [(64, 64), (128, 64), (64, 128), (256, 256)])
+def test_flash_block_invariance(bq, bk):
+    rng = np.random.default_rng(5)
+    q, k, v = (jnp.asarray(rng.standard_normal((1, 1, 256, 64)), jnp.float32)
+               for _ in range(3))
+    ref = attention_ref(q, k, v, causal=True)
+    got = flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=2e-5,
+                               atol=2e-4)
+
+
+@settings
+@hypothesis.given(
+    s_blocks=st.integers(1, 4), d=st.sampled_from([64, 128]),
+    seed=st.integers(0, 2**31), causal=st.booleans())
+def test_flash_property(s_blocks, d, seed, causal):
+    S = 64 * s_blocks
+    rng = np.random.default_rng(seed)
+    q, k, v = (jnp.asarray(rng.standard_normal((1, 1, S, d)), jnp.float32)
+               for _ in range(3))
+    got = flash_attention(q, k, v, causal=causal, block_q=64, block_k=64)
+    want = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5,
+                               atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# sweep_eval (the tuner's lattice evaluator as a TPU kernel)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("warp", [None, 8])
+@pytest.mark.parametrize("block_rows", [8, 64])
+def test_sweep_eval_matches_wave_model(warp, block_rows):
+    from repro.core.search_space import wg_ts_space
+    from repro.core.wave_model import WaveParams, model_time
+    from repro.kernels.sweep_eval.ops import sweep_eval
+
+    p = WaveParams(size=1 << 12, NP=64, GMT=16, L=4, kind="minimum",
+                   NU=15, warp=warp)
+    arrs = wg_ts_space(p.size).to_arrays()
+    out = np.asarray(sweep_eval(jnp.asarray(arrs["WG"], jnp.int32),
+                                jnp.asarray(arrs["TS"], jnp.int32), p,
+                                block_rows=block_rows))
+    for i, (wg, ts) in enumerate(zip(arrs["WG"], arrs["TS"])):
+        assert out[i] == model_time(p, int(wg), int(ts))
+
+
+@settings
+@hypothesis.given(size_exp=st.integers(4, 16), np_exp=st.integers(2, 7),
+                  gmt=st.sampled_from([4, 16, 64]))
+def test_sweep_eval_property(size_exp, np_exp, gmt):
+    from repro.core.search_space import wg_ts_space
+    from repro.core.wave_model import WaveParams, model_time
+    from repro.kernels.sweep_eval.ops import sweep_eval
+
+    p = WaveParams(size=1 << size_exp, NP=1 << np_exp, GMT=gmt,
+                   kind="minimum")
+    arrs = wg_ts_space(p.size).to_arrays()
+    out = np.asarray(sweep_eval(jnp.asarray(arrs["WG"], jnp.int32),
+                                jnp.asarray(arrs["TS"], jnp.int32), p))
+    idx = int(np.argmin(out))
+    truth = min(model_time(p, int(w), int(t))
+                for w, t in zip(arrs["WG"], arrs["TS"]))
+    assert int(out[idx]) == truth

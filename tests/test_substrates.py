@@ -1,0 +1,229 @@
+"""Substrate tests: optimizer, compression, data pipeline, checkpointing,
+fault-tolerant loop (failure injection, straggler re-dispatch, restart)."""
+
+import os
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, load_checkpoint, save_checkpoint
+from repro.configs import get_config
+from repro.data import DataConfig, SyntheticLM
+from repro.configs.base import ShapeSpec
+from repro.models import build_model
+from repro.optim import (adamw_init, adamw_update, compress_int8,
+                         cosine_schedule, decompress_int8, ef_compress_grads,
+                         global_norm)
+from repro.runtime import (LoopConfig, SimulatedFailure, TrainConfig,
+                           build_train_step, init_train_state, run_training)
+
+settings = hypothesis.settings(max_examples=20, deadline=None,
+                               suppress_health_check=list(hypothesis.HealthCheck))
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_converges_quadratic():
+    params = {"w": jnp.array([5.0, -3.0])}
+    opt = adamw_init(params)
+
+    def loss(p):
+        return jnp.sum((p["w"] - jnp.array([1.0, 2.0])) ** 2)
+
+    for _ in range(400):
+        g = jax.grad(loss)(params)
+        params, opt, m = adamw_update(params, g, opt, lr=0.05,
+                                      weight_decay=0.0)
+    np.testing.assert_allclose(np.asarray(params["w"]), [1.0, 2.0], atol=0.05)
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1e-3, warmup=10, total=100)
+    assert float(lr(jnp.int32(0))) == 0.0
+    assert abs(float(lr(jnp.int32(10))) - 1e-3) < 1e-9
+    assert float(lr(jnp.int32(100))) < 1e-5
+    assert float(lr(jnp.int32(5))) == pytest.approx(5e-4)
+
+
+def test_grad_clip_bounds_update():
+    params = {"w": jnp.zeros(4)}
+    opt = adamw_init(params)
+    huge = {"w": jnp.full(4, 1e9)}
+    _, _, m = adamw_update(params, huge, opt, lr=1e-3, clip_norm=1.0)
+    assert float(m["grad_norm"]) == pytest.approx(2e9, rel=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# compression
+# ---------------------------------------------------------------------------
+
+@settings
+@hypothesis.given(n=st.integers(1, 2000), seed=st.integers(0, 2**31))
+def test_int8_roundtrip_bounded_error(n, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    q, s = compress_int8(x)
+    y = decompress_int8(q, s, x.shape)
+    blockwise_max = float(jnp.max(jnp.abs(x)))
+    assert float(jnp.max(jnp.abs(x - y))) <= blockwise_max / 127.0 + 1e-6
+
+
+def test_error_feedback_accumulates_residual():
+    g = {"w": jnp.asarray(np.random.default_rng(0).standard_normal(512),
+                          jnp.float32)}
+    out1, r1 = ef_compress_grads(g, None)
+    # the residual is exactly the quantization error
+    np.testing.assert_allclose(
+        np.asarray(g["w"] - out1["w"]), np.asarray(r1["w"]), atol=1e-6)
+    # feeding zero grads next step flushes the residual back in
+    zero = {"w": jnp.zeros(512)}
+    out2, r2 = ef_compress_grads(zero, r1)
+    total = np.asarray(out1["w"] + out2["w"] + r2["w"])
+    np.testing.assert_allclose(total, np.asarray(g["w"]), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_data_determinism_and_sharding():
+    cfg = get_config("smollm-135m").reduced()
+    shape = ShapeSpec("t", 32, 8, "train")
+    d0 = SyntheticLM(cfg, shape, DataConfig(seed=1), host_index=0,
+                     host_count=2)
+    d1 = SyntheticLM(cfg, shape, DataConfig(seed=1), host_index=1,
+                     host_count=2)
+    assert d0.local_batch == 4
+    b0a, b0b = d0.batch(7), d0.batch(7)
+    np.testing.assert_array_equal(np.asarray(b0a["tokens"]),
+                                  np.asarray(b0b["tokens"]))
+    # different hosts see different data
+    assert not np.array_equal(np.asarray(d0.batch(7)["tokens"]),
+                              np.asarray(d1.batch(7)["tokens"]))
+    # iterator resumes mid-stream
+    it = d0.iterate(start=7)
+    np.testing.assert_array_equal(np.asarray(next(it)["tokens"]),
+                                  np.asarray(b0a["tokens"]))
+
+
+def test_data_tokens_in_vocab():
+    cfg = get_config("smollm-135m").reduced()
+    shape = ShapeSpec("t", 64, 4, "train")
+    d = SyntheticLM(cfg, shape)
+    t = np.asarray(d.batch(0)["tokens"])
+    assert t.min() >= 0 and t.max() < cfg.vocab
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3),
+            "nested": {"b": jnp.ones(4, jnp.bfloat16)},
+            "scalar": jnp.float32(3.5)}
+    save_checkpoint(str(tmp_path), 3, tree)
+    out, manifest = load_checkpoint(str(tmp_path), tree)
+    assert manifest["step"] == 3
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.asarray(tree["a"]))
+    assert np.asarray(out["nested"]["b"]).dtype == np.dtype("bfloat16") or \
+        str(np.asarray(out["nested"]["b"]).dtype) == "bfloat16"
+
+
+def test_checkpoint_manager_retention_and_async(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, save_interval=1)
+    tree = {"w": jnp.zeros(3)}
+    for step in (1, 2, 3, 4):
+        mgr.save(step, jax.tree.map(lambda x: x + step, tree))
+    mgr.wait()
+    from repro.checkpoint.store import available_steps
+    assert available_steps(str(tmp_path)) == [3, 4]
+    assert mgr.latest_step() == 4
+    out, _ = mgr.restore(tree)
+    np.testing.assert_array_equal(np.asarray(out["w"]), [4, 4, 4])
+
+
+def test_checkpoint_atomic_no_tmp_left(tmp_path):
+    save_checkpoint(str(tmp_path), 1, {"w": jnp.zeros(2)})
+    assert not any(p.endswith(".tmp") for p in os.listdir(tmp_path))
+
+
+# ---------------------------------------------------------------------------
+# fault-tolerant loop
+# ---------------------------------------------------------------------------
+
+def _toy_setup():
+    cfg = get_config("smollm-135m").reduced()
+    api = build_model(cfg)
+    tcfg = TrainConfig(lr=1e-3, warmup=2, total_steps=50)
+    state = init_train_state(api, jax.random.PRNGKey(0), tcfg)
+    step = jax.jit(build_train_step(api, tcfg))
+    shape = ShapeSpec("t", 16, 2, "train")
+    data = SyntheticLM(cfg, shape)
+    return state, step, data
+
+
+def test_loop_runs_and_loss_decreases(tmp_path):
+    state, step, data = _toy_setup()
+    final, hist = run_training(
+        step_fn=step, init_state=state, batch_fn=data.batch,
+        cfg=LoopConfig(total_steps=30, ckpt_every=10),
+        ckpt_dir=str(tmp_path))
+    assert len(hist.losses) == 30
+    assert np.mean(hist.losses[-5:]) < np.mean(hist.losses[:5])
+
+
+def test_loop_failure_injection_restores(tmp_path):
+    state, step, data = _toy_setup()
+    fail_at = {12}
+
+    def inject(step_i):
+        if step_i in fail_at:
+            fail_at.clear()
+            raise SimulatedFailure("pod lost")
+
+    final, hist = run_training(
+        step_fn=step, init_state=state, batch_fn=data.batch,
+        cfg=LoopConfig(total_steps=20, ckpt_every=5),
+        ckpt_dir=str(tmp_path), inject=inject)
+    assert hist.restarts == 1
+    assert hist.resumed_from == [10]      # restarted from step 10 ckpt
+    assert len(hist.losses) >= 20
+
+
+def test_loop_restart_resumes_from_checkpoint(tmp_path):
+    state, step, data = _toy_setup()
+    _, hist1 = run_training(
+        step_fn=step, init_state=state, batch_fn=data.batch,
+        cfg=LoopConfig(total_steps=10, ckpt_every=5),
+        ckpt_dir=str(tmp_path))
+    # second run continues to 15 from the committed step-10 checkpoint
+    _, hist2 = run_training(
+        step_fn=step, init_state=state, batch_fn=data.batch,
+        cfg=LoopConfig(total_steps=15, ckpt_every=5),
+        ckpt_dir=str(tmp_path))
+    assert hist2.resumed_from == [10]
+    assert len(hist2.losses) == 5
+
+
+def test_loop_straggler_redispatch():
+    state, step, data = _toy_setup()
+    import time as _t
+    slow = {8}
+
+    def inject(step_i):
+        if step_i in slow:
+            slow.clear()
+            _t.sleep(1.0)
+
+    _, hist = run_training(
+        step_fn=step, init_state=state, batch_fn=data.batch,
+        cfg=LoopConfig(total_steps=12, straggler_factor=2.5), inject=inject)
+    assert hist.straggler_events, "slow step not detected"
+    assert hist.redispatched >= 1
