@@ -18,9 +18,10 @@ from __future__ import annotations
 
 import time
 
-from repro.core import (AutoTuner, NonTermination, PlatformSpec, WaveParams,
+from repro.core import (NonTermination, PlatformSpec, WaveParams,
                         build_model, explore, model_time, sweep_times,
                         wg_ts_space)
+from repro.tune import PlatformTunable, tune
 
 # size -> (model_time, TS, WG) from the paper's Table 1
 PAPER_T1 = {8: (44, 4, 4), 16: (156, 4, 8), 32: (584, 4, 16),
@@ -36,11 +37,11 @@ def run(csv: list[str]) -> None:
           f"{'wall_s':>8} {'1st_trail':>9} {'1st_opt%':>8}   paper(t,TS,WG)")
     for size in (8, 16, 32, 64, 128, 256, 512, 1024):
         spec = PlatformSpec(size=size, NP=NP, GMT=GMT, kind="abstract")
-        tuner = AutoTuner(spec)
+        tunable = PlatformTunable(spec)
 
         # sweep: every size, exact
         t0 = time.perf_counter()
-        r = tuner.tune(engine="sweep")
+        r = tune(tunable, engine="sweep", cache=None)
         dt = time.perf_counter() - t0
 
         # first-counterexample optimality (paper cols 10-11): one random
@@ -66,7 +67,7 @@ def run(csv: list[str]) -> None:
 
         if size <= 16:   # explicit-state engine (SPIN-faithful)
             t0 = time.perf_counter()
-            re = tuner.tune(engine="explorer")
+            re = tune(tunable, engine="explorer", cache=None)
             dte = time.perf_counter() - t0
             agree = "OK" if re.t_min == r.t_min else "MISMATCH"
             print(f"{size:>6} {'explorer':>10} {re.t_min:>9} "
@@ -76,8 +77,8 @@ def run(csv: list[str]) -> None:
                        f"t_min={re.t_min};{agree}")
         if 16 < size <= 64:    # swarm engine (Python walks; larger sizes
             t0 = time.perf_counter()   # take minutes/walk — see §5 scaling)
-            rs = tuner.tune(engine="swarm", n_walks=8, seed=1,
-                            depth_limit=2_000_000)
+            rs = tune(tunable, engine="swarm", cache=None, n_walks=8,
+                      seed=1, depth_limit=2_000_000)
             dts = time.perf_counter() - t0
             agree = "OK" if rs.t_min == r.t_min else \
                 f"approx(+{100*(rs.t_min-r.t_min)/max(r.t_min,1):.1f}%)"

@@ -15,8 +15,9 @@ from __future__ import annotations
 
 import time
 
-from repro.core import AutoTuner, PlatformSpec, WaveParams, model_time, \
+from repro.core import PlatformSpec, WaveParams, model_time, \
     sweep_times, wg_ts_space
+from repro.tune import PlatformTunable, tune
 
 # paper Table 3 rows: (PEs, size, WG, TS) -> model time
 PAPER_T3 = [
@@ -44,7 +45,7 @@ def run(csv: list[str]) -> None:
                       (128, 1 << 20)]:
         spec = PlatformSpec(size=size, NP=pes, GMT=GMT, kind="minimum")
         t0 = time.perf_counter()
-        r = AutoTuner(spec).tune(engine="sweep")
+        r = tune(PlatformTunable(spec), engine="sweep", cache=None)
         dt = time.perf_counter() - t0
         wp = WaveParams(size=size, NP=pes, GMT=GMT, kind="minimum")
         truth = min(model_time(wp, c["WG"], c["TS"])

@@ -8,10 +8,13 @@ dry-runs."""
 
 from __future__ import annotations
 
+import tempfile
 import time
+from pathlib import Path
 
 from repro.core.tpu_machine import (TPUConfig, step_time, tune_distributed,
                                     workload_from_arch)
+from repro.tune import TuningCache, tune
 
 CELLS = [("minitron-8b", "train_4k", 1), ("qwen3-32b", "train_4k", 1),
          ("mixtral-8x22b", "train_4k", 1),
@@ -19,9 +22,9 @@ CELLS = [("minitron-8b", "train_4k", 1), ("qwen3-32b", "train_4k", 1),
          ("mamba2-2.7b", "train_4k", 1)]
 
 
-def run(csv: list[str]) -> None:
+def run(csv: list[str], cells=None) -> None:
     print("\n== TPU machine-model distributed tuning (chips/pod=256) ==")
-    for arch, shape, pods in CELLS:
+    for arch, shape, pods in (cells or CELLS):
         w = workload_from_arch(arch, shape)
         t0 = time.perf_counter()
         try:
@@ -45,9 +48,34 @@ def run(csv: list[str]) -> None:
                    f"gain={gain:.2f}x")
 
 
+def run_cache(csv: list[str]) -> None:
+    """Persistent TuningCache amortization: the same workload tuned
+    twice — engine run on the miss, answer served on the hit."""
+
+    print("\n== repro.tune TuningCache (tune once, serve forever) ==")
+    w = workload_from_arch("minitron-8b", "train_4k")
+    with tempfile.TemporaryDirectory() as d:
+        cache = TuningCache(Path(d) / "tune_cache.json")
+        t0 = time.perf_counter()
+        r1 = tune(w.tunable(chips_per_pod=256), engine="grid", cache=cache)
+        miss = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        r2 = tune(w.tunable(chips_per_pod=256), engine="grid", cache=cache)
+        hit = time.perf_counter() - t0
+        assert r2.best_config == r1.best_config
+        print(f"miss: {miss*1e3:8.2f} ms ({r1.oracle_calls} configs "
+              f"evaluated)   hit: {hit*1e3:8.3f} ms "
+              f"({miss/max(hit, 1e-9):,.0f}x)  stats={cache.stats}")
+        csv.append(f"tune_cache_miss,{miss*1e6:.1f},"
+                   f"configs={r1.oracle_calls}")
+        csv.append(f"tune_cache_hit,{hit*1e6:.2f},"
+                   f"speedup={miss/max(hit, 1e-9):.0f}x")
+
+
 def main() -> None:
     csv: list[str] = []
     run(csv)
+    run_cache(csv)
     for line in csv:
         print(line)
 

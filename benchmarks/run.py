@@ -1,25 +1,42 @@
 """Benchmark harness — one module per paper table/figure + the
 beyond-paper engines.  Prints ``name,us_per_call,derived`` CSV at the
-end (per-benchmark sections print richer tables above)."""
+end (per-benchmark sections print richer tables above).
+
+``--smoke`` runs a CI-sized subset: one distributed-tuning cell through
+the full ``repro.tune`` path (grid engine + cache hit/miss) plus the
+Table 3 model sweep — end-to-end tuning in well under a minute.
+"""
 
 from __future__ import annotations
 
+import argparse
 import time
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI subset: one tuning benchmark end-to-end")
+    args = ap.parse_args(argv)
+
     from benchmarks import (bench_roofline, bench_sweep, bench_table1,
                             bench_table2, bench_table3, bench_tpu_tuning)
 
     csv: list[str] = []
     t0 = time.perf_counter()
-    bench_table1.run(csv)
-    bench_table2.run(csv)
-    bench_table3.run(csv)
-    bench_sweep.run(csv)
-    bench_sweep.run_warp_ablation(csv)
-    bench_tpu_tuning.run(csv)
-    bench_roofline.run(csv)
+    if args.smoke:
+        bench_table3.run(csv)
+        bench_tpu_tuning.run(csv, cells=[("minitron-8b", "train_4k", 1)])
+        bench_tpu_tuning.run_cache(csv)
+    else:
+        bench_table1.run(csv)
+        bench_table2.run(csv)
+        bench_table3.run(csv)
+        bench_sweep.run(csv)
+        bench_sweep.run_warp_ablation(csv)
+        bench_tpu_tuning.run(csv)
+        bench_tpu_tuning.run_cache(csv)
+        bench_roofline.run(csv)
     dt = time.perf_counter() - t0
 
     print("\n== CSV (name,us_per_call,derived) ==")

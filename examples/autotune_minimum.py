@@ -1,13 +1,15 @@
 """Auto-tune the Minimum kernel (paper §7) at realistic scale, then run
-the tuned Pallas kernel and verify the tuning against measurement.
+the tuned Pallas kernel and verify the tuning against measurement — all
+through the unified ``repro.tune`` API.
 
     PYTHONPATH=src python examples/autotune_minimum.py
 
 1. model-check the (WG, TS) lattice for a 2^20-element reduction on a
    GPU-like abstract platform (15 units × 128 PEs),
 2. tune the TPU Pallas kernel's block_rows with the same machinery
-   (FunctionTuner over the HBM-streaming cost model),
-3. execute the tuned kernel (interpret mode on CPU) and check the result
+   (grid engine over the HBM-streaming cost model),
+3. execute the kernel with block_rows *omitted* — the ``@autotune``
+   decorator resolves it from the tuning cache — and check the result
    against the pure-jnp oracle.
 """
 
@@ -17,37 +19,42 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import AutoTuner, FunctionTuner, PlatformSpec
-from repro.kernels.tuned_reduction import ops as red
+from repro.core import PlatformSpec
+from repro.kernels.tuned_reduction.ops import ReductionTunable, reduce_1d, \
+    reduce_ref
+from repro.tune import PlatformTunable, tune
 
 SIZE = 1 << 20
 
 # 1. paper-style tuning of the abstract OpenCL kernel
 spec = PlatformSpec(size=SIZE, NP=128, GMT=16, L=8, kind="minimum")
 t0 = time.perf_counter()
-res = AutoTuner(spec).tune(engine="sweep")
+res = tune(PlatformTunable(spec), engine="sweep", cache=None)
 print(f"abstract platform: optimal WG={res.best_config['WG']} "
       f"TS={res.best_config['TS']} model_time={res.t_min} "
       f"({(time.perf_counter()-t0)*1e3:.1f} ms over the whole lattice)")
 
 # swarm agrees (randomized bounded search, Fig. 5)
-swarm = AutoTuner(PlatformSpec(size=64, NP=4, GMT=16, kind="minimum"))
-r_sw = swarm.tune(engine="swarm", n_walks=8, seed=0)
-r_ex = swarm.tune(engine="sweep")
+small = PlatformTunable(PlatformSpec(size=64, NP=4, GMT=16, kind="minimum"))
+r_sw = tune(small, engine="swarm", cache=None, n_walks=8, seed=0)
+r_ex = tune(small, engine="sweep", cache=None)
 print(f"swarm sanity (size=64): swarm t={r_sw.t_min} vs exhaustive "
       f"t={r_ex.t_min}")
 
 # 2. tune the Pallas kernel's block size with the same method
-space = red.tuning_space(SIZE)
-tuner = FunctionTuner(lambda cfg: red.cost_model(cfg, n=SIZE), space)
-kres = tuner.tune()
+kres = tune(ReductionTunable(SIZE), engine="grid")
 print(f"pallas kernel: block_rows={kres.best_config['block_rows']} "
-      f"modeled {kres.t_min:.1f} us  ({kres.oracle_calls} configs)")
+      f"modeled {kres.t_min:.1f} us  ({kres.oracle_calls or 'cached'} "
+      f"configs, cache {kres.stats.get('cache')})")
 
-# 3. run the tuned kernel and validate
+# 3. run the kernel with block_rows omitted: @autotune resolves it from
+# the cache (the tuning above already warmed it) and validates
 x = jnp.asarray(np.random.default_rng(0).integers(-2**31, 2**31 - 1, SIZE,
                 dtype=np.int64).astype(np.int32))
-got = red.reduce_1d(x, op="min", block_rows=kres.best_config["block_rows"])
-want = red.reduce_ref(x, "min")
+got = reduce_1d(x, op="min")
+want = reduce_ref(x, "min")
 assert int(got) == int(want)
-print(f"tuned kernel result {int(got)} == oracle {int(want)}  ✓")
+decision = reduce_1d.tune(x, op="min")
+assert decision.stats["cache"] == "hit"
+print(f"tuned kernel result {int(got)} == oracle {int(want)}  ✓ "
+      f"(block_rows={decision.best_config['block_rows']} from cache)")

@@ -1,4 +1,5 @@
-"""Quickstart: the paper's four-step counterexample method, end to end.
+"""Quickstart: the paper's four-step counterexample method, end to end,
+through the unified ``repro.tune`` API.
 
     PYTHONPATH=src python examples/quickstart.py
 
@@ -8,10 +9,13 @@ Step 3 searches for the minimal termination time (bisection on T),
 Step 4 extracts the tuning configuration from the final counterexample.
 """
 
+import tempfile
 import time
+from pathlib import Path
 
-from repro.core import (AutoTuner, Counterexample, OverTime, PlatformSpec,
-                        build_model, explore)
+from repro.core import Counterexample, OverTime, PlatformSpec, build_model, \
+    explore
+from repro.tune import PlatformTunable, TuningCache, tune
 
 # Step 1 — the abstract platform: 4 processing elements, global/local
 # memory ratio 4, input size 16, Minimum-problem kernel (paper §7).
@@ -30,17 +34,28 @@ cex = Counterexample.from_terminal(r.counterexample)
 print(f"Step 3: counterexample found — terminates at time {cex.time} "
       f"(explored {r.states} states)")
 
-# ... minimized via bisection (Fig. 1), packaged in AutoTuner:
+# ... minimized via bisection (Fig. 1): one tunable, any engine from the
+# registry — the paper's loop packaged as repro.tune.tune.
+tunable = PlatformTunable(spec)
 for engine in ("explorer", "swarm", "sweep"):
     t0 = time.perf_counter()
-    res = AutoTuner(spec).tune(engine=engine)
+    res = tune(tunable, engine=engine, cache=None)
     dt = time.perf_counter() - t0
     print(f"   engine={engine:9s} T_min={res.t_min:4d} "
           f"config={res.best_config} ({dt:.3f}s)")
 
 # Step 4 — the final counterexample's configuration is the tuning; the
 # trail replays through the model (SPIN trail simulation).
-res = AutoTuner(spec).tune(engine="explorer")
+res = tune(tunable, engine="explorer", cache=None)
 assert res.witness.validate(build_model(spec))
 print(f"Step 4: optimal tuning parameters = {res.best_config} "
       f"(trail of {len(res.witness.trail)} transitions replays OK)")
+
+# Beyond the paper: tuned configs persist — the second call with the
+# same fingerprint is served from the TuningCache, no engine run.
+with tempfile.TemporaryDirectory() as d:
+    cache = TuningCache(Path(d) / "tune_cache.json")
+    tune(tunable, engine="sweep", cache=cache)
+    again = tune(tunable, engine="sweep", cache=cache)
+    print(f"Cache: second call served from {cache.path.name} "
+          f"({again.stats['cache']}, stats={cache.stats})")

@@ -1,32 +1,29 @@
-"""Top-level auto-tuning API (the paper's four-step method, packaged).
+"""DEPRECATED legacy tuning entry points (thin shims over ``repro.tune``).
 
-``AutoTuner`` runs the paper's loop end to end:
+``AutoTuner`` and ``FunctionTuner`` were the seed's two front doors; all
+tuning now goes through the unified :mod:`repro.tune` API —
 
-1. *model* — an abstract platform model (`PlatformSpec` → Promela-like
-   process system) or any pure evaluation function over a search space;
-2. *property* — Φ_o(T) over-time;
-3. *search* — bisection on T (Fig. 1) against a counterexample oracle:
-   ``engine="explorer"`` (explicit-state DFS — SPIN-faithful),
-   ``engine="swarm"``   (Fig. 5 randomized bounded search),
-   ``engine="sweep"``   (vectorized lattice evaluation — beyond-paper);
-4. *extract* — the final counterexample's tuning configuration.
+    from repro.tune import tune, PlatformTunable, FunctionTunable
+    tune(PlatformTunable(spec), engine="sweep")     # was AutoTuner(spec).tune("sweep")
+    tune(FunctionTunable(cost_fn, space), "grid")   # was FunctionTuner(cost_fn, space).tune()
 
-This is also the integration point for the rest of the framework: the
-launcher tunes Pallas kernel block sizes and distributed-training
-parameters through this interface (see `repro.core.tpu_machine` and
-`repro.launch.train --tune`).
+— which adds the engine registry and the persistent
+:class:`~repro.tune.TuningCache`.  The shims delegate verbatim (with
+caching disabled, matching the old behavior) and are kept only so
+existing callers and the parity tests keep working; new code should not
+use them.  ``TuneResult`` remains defined here as the leaf dataclass both
+layers share.
 """
 
 from __future__ import annotations
 
-import time as _time
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
-from . import bisect_search, explorer, platform, properties, swarm, sweep
 from .counterexample import Counterexample
 from .search_space import SearchSpace
-from .wave_model import WaveParams, model_time
+from .wave_model import WaveParams
 
 
 @dataclass
@@ -41,34 +38,15 @@ class TuneResult:
     log: Any = None
 
 
-def _explorer_oracle(model, config_vars, *, schedule="por", max_states=2_000_000):
-    def oracle(T: int) -> Counterexample | None:
-        prop = properties.OverTime(T)
-        r = explorer.explore(model, prop.violates, schedule=schedule,
-                             max_states=max_states)
-        if r.counterexample is None:
-            return None
-        return Counterexample.from_terminal(r.counterexample, config_vars)
-    return oracle
-
-
-def _simulate_t_ini(model) -> int:
-    """The paper obtains T_ini from a SPIN simulation run: one random
-    walk to FIN reads off a feasible termination time."""
-
-    for seed in range(16):
-        r = explorer.explore(model, properties.NonTermination().violates,
-                             schedule="random", seed=seed, depth_limit=2_000_000)
-        if r.counterexample is not None:
-            return int(r.counterexample.globals["time"])
-    raise RuntimeError("simulation never reached FIN")
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(f"{old} is deprecated; use {new}",
+                  DeprecationWarning, stacklevel=3)
 
 
 class AutoTuner:
-    """Tunes a :class:`~repro.core.platform.PlatformSpec` workload."""
+    """DEPRECATED: use ``repro.tune.tune(PlatformTunable(spec), ...)``."""
 
-    def __init__(self, spec: platform.PlatformSpec,
-                 space: SearchSpace | None = None,
+    def __init__(self, spec, space: SearchSpace | None = None,
                  config_vars: tuple[str, ...] = ("WG", "TS")):
         self.spec = spec
         self.space = space
@@ -76,130 +54,30 @@ class AutoTuner:
         self.wave = WaveParams(size=spec.size, NP=spec.NP, GMT=spec.GMT,
                                L=spec.L, kind=spec.kind)
 
-    # -- engines -------------------------------------------------------------
-
     def tune(self, engine: str = "sweep", **kw) -> TuneResult:
-        t0 = _time.perf_counter()
-        if engine == "sweep":
-            res = self._tune_sweep(**kw)
-        elif engine == "explorer":
-            res = self._tune_explorer(**kw)
-        elif engine == "swarm":
-            res = self._tune_swarm(**kw)
-        elif engine == "bnb":
-            res = self._tune_bnb(**kw)
-        else:
-            raise ValueError(f"unknown engine {engine!r}")
-        res.elapsed_s = _time.perf_counter() - t0
-        return res
-
-    def _tune_sweep(self, use_bisection: bool = False) -> TuneResult:
-        if use_bisection:
-            # run the paper's Fig.1 loop with the sweep as C_ex oracle
-            oracle = sweep.cex_oracle(self.wave, self.space)
-            t_ini = model_time(self.wave, WG=1, TS=1)  # trivially feasible config
-            br = bisect_search.find_minimal_time(oracle, t_ini=t_ini)
-            return TuneResult(best_config=br.witness.config, t_min=br.t_min,
-                              engine="sweep+bisection",
-                              oracle_calls=br.oracle_calls,
-                              witness=br.witness, log=br.log)
-        r = sweep.sweep_times(self.wave, self.space)
-        return TuneResult(best_config=r.best_config, t_min=r.t_min,
-                          engine="sweep", oracle_calls=1,
-                          stats={"evaluated": r.evaluated})
-
-    def _tune_explorer(self, schedule: str = "por", mode: str = "collect",
-                       max_states: int = 2_000_000) -> TuneResult:
-        model = platform.build_model(self.spec)
-        if mode == "collect":
-            # The paper's own optimization (§6): run SPIN once with -e
-            # (trails for ALL errors) against Φ_t, then post-process the
-            # collected counterexamples — every terminating execution is
-            # a counterexample to non-termination, so one exploration
-            # yields the whole (config -> time) table and the bisection
-            # answers from it.
-            r = explorer.explore(model, properties.NonTermination().violates,
-                                 schedule=schedule, max_states=max_states,
-                                 stop_on_first=False, collect_terminals=True)
-            if not r.terminals:
-                raise RuntimeError("no terminating executions found")
-            table = [Counterexample.from_terminal(t, self.config_vars)
-                     for t in r.terminals]
-
-            def oracle(T: int) -> Counterexample | None:
-                ok = [c for c in table if c.time <= T]
-                return min(ok, key=lambda c: c.time) if ok else None
-
-            t_ini = max(c.time for c in table)
-            br = bisect_search.find_minimal_time(oracle, t_ini=t_ini)
-            return TuneResult(best_config=br.witness.config, t_min=br.t_min,
-                              engine=f"explorer/{schedule}+collect",
-                              oracle_calls=br.oracle_calls,
-                              witness=br.witness, log=br.log,
-                              stats={"states": r.states,
-                                     "terminals": len(table)})
-        oracle = _explorer_oracle(model, self.config_vars,
-                                  schedule=schedule, max_states=max_states)
-        t_ini = _simulate_t_ini(model)
-        br = bisect_search.find_minimal_time(oracle, t_ini=t_ini)
-        return TuneResult(best_config=br.witness.config, t_min=br.t_min,
-                          engine=f"explorer/{schedule}",
-                          oracle_calls=br.oracle_calls, witness=br.witness,
-                          log=br.log)
-
-    def _tune_bnb(self, schedule: str = "por",
-                  max_states: int = 5_000_000) -> TuneResult:
-        """Ruys-style branch-and-bound (paper §8 future work [11]): the
-        minimal time from ONE verification run — no bisection."""
-
-        model = platform.build_model(self.spec)
-        r = explorer.explore(model, lambda G: False, schedule=schedule,
-                             branch_and_bound="time", stop_on_first=False,
-                             max_states=max_states)
-        if r.counterexample is None:
-            raise RuntimeError("no terminating execution found")
-        cex = Counterexample.from_terminal(r.counterexample,
-                                           self.config_vars)
-        return TuneResult(best_config=cex.config, t_min=cex.time,
-                          engine=f"bnb/{schedule}", oracle_calls=1,
-                          witness=cex, stats={"states": r.states})
-
-    def _tune_swarm(self, n_walks: int = 16, depth_limit: int = 500_000,
-                    seed: int = 0, n_workers: int = 1) -> TuneResult:
-        model = platform.build_model(self.spec)
-        sr = swarm.swarm_search(model, n_walks=n_walks,
-                                depth_limit=depth_limit, seed=seed,
-                                n_workers=n_workers,
-                                config_vars=self.config_vars)
-        return TuneResult(best_config=sr.best.config, t_min=sr.t_min,
-                          engine="swarm", oracle_calls=sr.stats.rounds,
-                          witness=sr.best,
-                          stats={"walks": sr.stats.walks,
-                                 "counterexamples": sr.stats.counterexamples})
+        _deprecated("repro.core.AutoTuner",
+                    "repro.tune.tune(repro.tune.PlatformTunable(spec), ...)")
+        from ..tune import PlatformTunable, tune
+        tunable = PlatformTunable(self.spec, space=self.space,
+                                  config_vars=self.config_vars)
+        return tune(tunable, engine=engine, cache=None, **kw)
 
 
 class FunctionTuner:
-    """Generic tuner over an arbitrary cost function (used for Pallas
-    kernel block sizes and TPU distributed configs): same Fig. 1 protocol,
-    with the cost function as the machine model."""
+    """DEPRECATED: use ``repro.tune.tune(FunctionTunable(cost_fn, space),
+    engine="grid")``."""
 
     def __init__(self, cost_fn: Callable[[dict], float], space: SearchSpace):
         self.cost_fn = cost_fn
         self.space = space
 
     def tune(self) -> TuneResult:
-        t0 = _time.perf_counter()
-        best_cfg, best_t = None, None
-        n = 0
-        for cfg in self.space:
-            t = self.cost_fn(cfg)
-            n += 1
-            if best_t is None or t < best_t:
-                best_cfg, best_t = dict(cfg), t
-        if best_cfg is None:
-            raise RuntimeError("empty search space")
-        return TuneResult(best_config=best_cfg, t_min=best_t, engine="function",
-                          oracle_calls=n, elapsed_s=_time.perf_counter() - t0)
+        _deprecated("repro.core.FunctionTuner",
+                    "repro.tune.tune(repro.tune.FunctionTunable(...), "
+                    "engine='grid')")
+        from ..tune import FunctionTunable, tune
+        return tune(FunctionTunable(self.cost_fn, self.space),
+                    engine="function", cache=None)
 
 
 __all__ = ["AutoTuner", "FunctionTuner", "TuneResult"]

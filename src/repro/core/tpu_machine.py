@@ -22,9 +22,9 @@ recompile (§Perf loop).
 
 from __future__ import annotations
 
-import itertools
-from dataclasses import dataclass, field
-from typing import Any
+import math
+from dataclasses import asdict, dataclass
+from typing import Any, ClassVar, Mapping
 
 from .search_space import Param, SearchSpace
 
@@ -47,6 +47,25 @@ class TPUWorkload:
     vocab: int
     dtype_bytes: int = 2
     flops_const: float = 6.0         # 6 = fwd+bwd
+
+    # -- repro.tune Tunable protocol (default 256-chip single-pod target;
+    # use .tunable() to pin a different platform) --------------------------
+
+    name: ClassVar[str] = "tpu.workload"
+
+    def tunable(self, *, chips_per_pod: int = 256, pods: int = 1,
+                hbm_bytes: float = 16e9) -> "DistributedTunable":
+        return DistributedTunable(self, chips_per_pod=chips_per_pod,
+                                  pods=pods, hbm_bytes=hbm_bytes)
+
+    def space(self) -> SearchSpace:
+        return self.tunable().space()
+
+    def cost(self, cfg: Mapping[str, Any]) -> float:
+        return self.tunable().cost(cfg)
+
+    def fingerprint(self) -> dict[str, Any]:
+        return self.tunable().fingerprint()
 
 
 @dataclass(frozen=True)
@@ -133,22 +152,65 @@ def config_space(chips_per_pod: int = 256, pods: int = 1) -> SearchSpace:
     return space
 
 
+@dataclass(frozen=True)
+class DistributedTunable:
+    """``repro.tune`` Tunable: the distributed-training configuration
+    lattice for one workload on a pods × chips platform.  Infeasible
+    (HBM-overflowing) points cost ``inf``."""
+
+    workload: TPUWorkload
+    chips_per_pod: int = 256
+    pods: int = 1
+    hbm_bytes: float = 16e9
+    name: ClassVar[str] = "tpu.distributed"
+
+    def __post_init__(self):
+        # step-time decompositions computed during the search, so callers
+        # (tune_distributed's ranked list) don't price the lattice twice
+        object.__setattr__(self, "_decompositions", {})
+
+    def space(self) -> SearchSpace:
+        return config_space(self.chips_per_pod, self.pods)
+
+    def to_config(self, cfg: Mapping[str, Any]) -> TPUConfig:
+        return TPUConfig(dp=self.chips_per_pod // cfg["tp"], tp=cfg["tp"],
+                         pods=self.pods, microbatches=cfg["microbatches"],
+                         remat=cfg["remat"], fsdp=cfg["fsdp"],
+                         compress_pod_grads=cfg["compress_pod_grads"])
+
+    def cost(self, cfg: Mapping[str, Any]) -> float:
+        c = self.to_config(cfg)
+        if not hbm_fits(self.workload, c, hbm_bytes=self.hbm_bytes):
+            return float("inf")
+        t = step_time(self.workload, c)
+        self._decompositions[c] = t
+        return t["total"]
+
+    def decomposition(self, c: TPUConfig) -> dict[str, float]:
+        t = self._decompositions.get(c)
+        return t if t is not None else step_time(self.workload, c)
+
+    def fingerprint(self) -> dict[str, Any]:
+        return {"tunable": self.name, "workload": asdict(self.workload),
+                "chips_per_pod": self.chips_per_pod, "pods": self.pods,
+                "hbm_bytes": self.hbm_bytes}
+
+
 def tune_distributed(w: TPUWorkload, *, chips_per_pod: int = 256,
                      pods: int = 1, hbm_bytes: float = 16e9):
-    """Sweep the config lattice through the machine model; returns
-    (best TPUConfig, best step decomposition, ranked list)."""
+    """Sweep the config lattice through the machine model (via the
+    ``repro.tune`` grid engine); returns (best TPUConfig, best step
+    decomposition, ranked list)."""
 
-    space = config_space(chips_per_pod, pods)
+    from ..tune import tune as _tune
+    tb = DistributedTunable(w, chips_per_pod=chips_per_pod, pods=pods,
+                            hbm_bytes=hbm_bytes)
+    res = _tune(tb, engine="grid", cache=None, keep_trace=True)
     ranked = []
-    for cfg in space:
-        c = TPUConfig(dp=chips_per_pod // cfg["tp"], tp=cfg["tp"],
-                      pods=pods, microbatches=cfg["microbatches"],
-                      remat=cfg["remat"], fsdp=cfg["fsdp"],
-                      compress_pod_grads=cfg["compress_pod_grads"])
-        if not hbm_fits(w, c, hbm_bytes=hbm_bytes):
-            continue
-        t = step_time(w, c)
-        ranked.append((t["total"], c, t))
+    for total, cfg in res.stats["trace"]:
+        if math.isfinite(total):
+            c = tb.to_config(cfg)
+            ranked.append((total, c, tb.decomposition(c)))
     if not ranked:
         raise RuntimeError("no feasible configuration fits HBM")
     ranked.sort(key=lambda r: r[0])
@@ -169,5 +231,6 @@ def workload_from_arch(arch: str, shape_name: str) -> TPUWorkload:
                        vocab=cfg.vocab)
 
 
-__all__ = ["TPUWorkload", "TPUConfig", "step_time", "hbm_fits",
-           "config_space", "tune_distributed", "workload_from_arch"]
+__all__ = ["TPUWorkload", "TPUConfig", "DistributedTunable", "step_time",
+           "hbm_fits", "config_space", "tune_distributed",
+           "workload_from_arch"]

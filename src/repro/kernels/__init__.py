@@ -1,8 +1,13 @@
 """Pallas TPU kernels for the compute hot-spots the paper tunes.
 
 Each kernel ships as kernel.py (pl.pallas_call + BlockSpec VMEM tiling),
-ops.py (jit'd wrapper + tuning_space/cost_model hooks for the
-model-checking auto-tuner) and ref.py (pure-jnp oracle).  Models use
-pure-JAX math by default; kernels are validated in interpret mode on CPU
-and are the TPU runtime path.
+ops.py (jit'd wrapper + a ``repro.tune`` Tunable and an ``@autotune``
+entry point that resolves block sizes from the persistent tuning cache)
+and ref.py (pure-jnp oracle).  Models use pure-JAX math by default;
+kernels are validated in interpret mode on CPU and are the TPU runtime
+path.  Shared wrapper helpers live in :mod:`repro.kernels.common`.
 """
+
+from .common import is_cpu, resolve_interpret
+
+__all__ = ["is_cpu", "resolve_interpret"]

@@ -1,0 +1,24 @@
+"""Shared kernel-wrapper helpers (deduplicated from the per-kernel
+``ops.py`` files).
+
+Every Pallas wrapper takes ``interpret: bool | None``; ``None`` means
+"interpret mode iff no real accelerator" so the same call sites run on
+CPU (interpret) and TPU (compiled) unchanged.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def is_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Default Pallas interpret mode: on for CPU, off on accelerators."""
+
+    return is_cpu() if interpret is None else bool(interpret)
+
+
+__all__ = ["is_cpu", "resolve_interpret"]

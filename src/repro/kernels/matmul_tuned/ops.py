@@ -1,26 +1,27 @@
-"""Jitted wrapper + tuning hooks for the blocked matmul kernel."""
+"""Jitted wrapper + ``repro.tune`` integration for the blocked matmul.
+
+``matmul_tuned(a, b)`` with block sizes omitted resolves (bm, bn, bk)
+through the ``@autotune`` decorator: the :class:`MatmulTunable` built
+from the operand shapes is tuned on first sight (grid over the cost
+model) and served from the persistent :class:`~repro.tune.TuningCache`
+afterwards.  Explicit block sizes bypass tuning entirely.
+"""
 
 from __future__ import annotations
 
 import functools
+import time
+from dataclasses import dataclass
+from typing import Any, ClassVar, Mapping
 
 import jax
 import jax.numpy as jnp
 
 from ...core.search_space import Param, SearchSpace
+from ...tune import autotune
+from ..common import resolve_interpret
 from .kernel import matmul
 from .ref import matmul_ref
-
-
-def _is_cpu() -> bool:
-    return jax.default_backend() == "cpu"
-
-
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
-def matmul_tuned(a: jax.Array, b: jax.Array, *, bm: int = 256, bn: int = 256,
-                 bk: int = 512, interpret: bool | None = None) -> jax.Array:
-    interpret = _is_cpu() if interpret is None else interpret
-    return matmul(a, b, bm=bm, bn=bn, bk=bk, interpret=interpret)
 
 
 def tuning_space(M: int, N: int, K: int, dtype_bytes: int = 2,
@@ -70,4 +71,62 @@ def cost_model(cfg: dict, *, M: int, N: int, K: int, dtype_bytes: int = 2,
     return max(compute_us, mem_us) + steps * grid_overhead_us
 
 
-__all__ = ["matmul_tuned", "tuning_space", "cost_model", "matmul_ref"]
+@dataclass(frozen=True)
+class MatmulTunable:
+    """``repro.tune`` Tunable: (bm, bn, bk) block sizes for an
+    (M, K) x (K, N) matmul."""
+
+    M: int
+    N: int
+    K: int
+    dtype_bytes: int = 2
+    name: ClassVar[str] = "kernels.matmul_tuned"
+
+    def space(self) -> SearchSpace:
+        return tuning_space(self.M, self.N, self.K, self.dtype_bytes)
+
+    def cost(self, cfg: Mapping[str, Any]) -> float:
+        return cost_model(cfg, M=self.M, N=self.N, K=self.K,
+                          dtype_bytes=self.dtype_bytes)
+
+    def measure(self, cfg: Mapping[str, Any], *, iters: int = 2) -> float:
+        """Wall-clock microseconds of the real kernel (hardware oracle)."""
+
+        dtype = jnp.bfloat16 if self.dtype_bytes == 2 else jnp.float32
+        a = jnp.ones((self.M, self.K), dtype)
+        b = jnp.ones((self.K, self.N), dtype)
+        run = lambda: _matmul_call(a, b, bm=cfg["bm"], bn=cfg["bn"],
+                                   bk=cfg["bk"], interpret=None)
+        run().block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = run()
+        out.block_until_ready()
+        return (time.perf_counter() - t0) / iters * 1e6
+
+    def fingerprint(self) -> dict[str, Any]:
+        return {"tunable": self.name, "M": self.M, "N": self.N, "K": self.K,
+                "dtype_bytes": self.dtype_bytes}
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def _matmul_call(a: jax.Array, b: jax.Array, *, bm: int, bn: int, bk: int,
+                 interpret: bool | None) -> jax.Array:
+    return matmul(a, b, bm=bm, bn=bn, bk=bk,
+                  interpret=resolve_interpret(interpret))
+
+
+@autotune(lambda a, b, **kw: MatmulTunable(M=a.shape[0], N=b.shape[1],
+                                           K=a.shape[1],
+                                           dtype_bytes=a.dtype.itemsize),
+          params=("bm", "bn", "bk"))
+def matmul_tuned(a: jax.Array, b: jax.Array, *, bm: int | None = None,
+                 bn: int | None = None, bk: int | None = None,
+                 interpret: bool | None = None) -> jax.Array:
+    """Blocked matmul; omitted block sizes are auto-tuned (cached)."""
+
+    return _matmul_call(a, b, bm=bm, bn=bn, bk=bk, interpret=interpret)
+
+
+__all__ = ["matmul_tuned", "MatmulTunable", "tuning_space", "cost_model",
+           "matmul_ref"]

@@ -1,33 +1,82 @@
-"""Jitted wrapper for the on-device lattice sweep kernel."""
+"""Jitted wrapper + ``repro.tune`` integration for the on-device lattice
+sweep kernel — the tuner tuning its own evaluator: ``block_rows`` for
+the sweep kernel is itself resolved through ``@autotune`` when omitted.
+"""
 
 from __future__ import annotations
 
 import functools
+from dataclasses import dataclass
+from typing import Any, ClassVar, Mapping
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+from ...core.search_space import Param, SearchSpace
 from ...core.wave_model import WaveParams
+from ...tune import autotune
+from ..common import resolve_interpret
 from .kernel import SENTINEL, sweep_eval_rows
 from .ref import sweep_ref
 
 _LANES = 128
 
 
-def _is_cpu() -> bool:
-    return jax.default_backend() == "cpu"
+def tuning_space(n: int, vmem_bytes: int = 64 * 2**20) -> SearchSpace:
+    """block_rows lattice: powers of two up to the (padded) data or the
+    VMEM bound — three int32 streams (WG, TS in; time out) per tile."""
+
+    rows_total = max(8, -(-n // _LANES))
+    vals = []
+    r = 8
+    while r <= max(8, rows_total) and 3 * r * _LANES * 4 <= vmem_bytes // 2:
+        vals.append(r)
+        r *= 2
+    return SearchSpace(params=[Param("block_rows", tuple(vals) or (8,))])
 
 
+def cost_model(cfg: dict, *, n: int, dtype_bytes: int = 4,
+               hbm_gbps: float = 819.0, grid_overhead_us: float = 1.0) -> float:
+    """Modeled microseconds: HBM streaming of the padded (WG, TS, out)
+    arrays + per-grid-step dispatch.  Padding charges oversized blocks
+    on small lattices; dispatch count charges undersized blocks."""
+
+    tile = cfg["block_rows"] * _LANES
+    padded = max(tile, -(-n // tile) * tile)
+    steps = padded // tile
+    stream_us = (3 * padded * dtype_bytes) / (hbm_gbps * 1e3)
+    return stream_us + steps * grid_overhead_us
+
+
+@dataclass(frozen=True)
+class SweepEvalTunable:
+    """``repro.tune`` Tunable: block_rows for an n-point lattice sweep."""
+
+    n: int
+    name: ClassVar[str] = "kernels.sweep_eval"
+
+    def space(self) -> SearchSpace:
+        return tuning_space(self.n)
+
+    def cost(self, cfg: Mapping[str, Any]) -> float:
+        return cost_model(cfg, n=self.n)
+
+    def fingerprint(self) -> dict[str, Any]:
+        return {"tunable": self.name, "n": self.n}
+
+
+@autotune(lambda wg, ts, p, **kw: SweepEvalTunable(n=int(wg.shape[0])),
+          params=("block_rows",))
 @functools.partial(jax.jit, static_argnames=("p", "block_rows", "interpret"))
 def sweep_eval(wg: jax.Array, ts: jax.Array, p: WaveParams, *,
-               block_rows: int = 64, interpret: bool | None = None
+               block_rows: int | None = None, interpret: bool | None = None
                ) -> jax.Array:
     """Evaluate the Minimum-model time for flat config arrays (n,).
 
-    Pads to a (rows, 128) view, runs the Pallas kernel, returns (n,)."""
+    Pads to a (rows, 128) view, runs the Pallas kernel, returns (n,).
+    An omitted ``block_rows`` is auto-tuned (cached)."""
 
-    interpret = _is_cpu() if interpret is None else interpret
+    interpret = resolve_interpret(interpret)
     n = wg.shape[0]
     tile = block_rows * _LANES
     padded = max(tile, -(-n // tile) * tile)
@@ -40,4 +89,5 @@ def sweep_eval(wg: jax.Array, ts: jax.Array, p: WaveParams, *,
     return out.reshape(-1)[:n]
 
 
-__all__ = ["sweep_eval", "sweep_ref", "SENTINEL"]
+__all__ = ["sweep_eval", "SweepEvalTunable", "tuning_space", "cost_model",
+           "sweep_ref", "SENTINEL"]

@@ -1,51 +1,31 @@
-"""Jitted public wrapper for the tuned reduction kernel + its tuning hooks.
+"""Jitted public wrapper + ``repro.tune`` integration for the tuned
+reduction kernel.
 
 ``reduce_1d`` handles arbitrary 1-D inputs: pad with the monoid identity
 to a (rows, 128) view with rows divisible by block_rows, run the Pallas
-kernel, fold the remaining (8, 128) tile with jnp.
-
-``tuning_space`` / ``cost_model`` expose the kernel to the
-model-checking auto-tuner: block_rows is the paper's TS; the cost model
-is the TPU analogue of the abstract platform's timing (HBM streaming
-dominates — the reduction is memory-bound)."""
+kernel, fold the remaining (8, 128) tile with jnp.  ``block_rows`` is
+the paper's TS; when omitted it resolves through ``@autotune`` (the
+:class:`ReductionTunable` cost model is the TPU analogue of the abstract
+platform's timing — HBM streaming dominates, the reduction is
+memory-bound) and the persistent tuning cache.
+"""
 
 from __future__ import annotations
 
 import functools
+from dataclasses import dataclass
+from typing import Any, ClassVar, Mapping
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ...core.search_space import Param, SearchSpace
+from ...tune import autotune
+from ..common import resolve_interpret
 from .kernel import _combine, _identity, reduce_rows
 from .ref import reduce_ref
 
 _LANES = 128
-
-
-def _is_cpu() -> bool:
-    return jax.default_backend() == "cpu"
-
-
-@functools.partial(jax.jit, static_argnames=("op", "block_rows", "interpret"))
-def reduce_1d(x: jax.Array, *, op: str = "min", block_rows: int = 256,
-              interpret: bool | None = None) -> jax.Array:
-    """Reduce a 1-D array with the Pallas kernel (minimum by default)."""
-
-    interpret = _is_cpu() if interpret is None else interpret
-    ident = _identity(op, x.dtype)
-
-    n = x.shape[0]
-    tile = block_rows * _LANES
-    padded = -(-n // tile) * tile
-    if padded != n:
-        x = jnp.concatenate([x, jnp.full((padded - n,), ident, x.dtype)])
-    view = x.reshape(-1, _LANES)
-
-    part = reduce_rows(view, block_rows=block_rows, op=op, interpret=interpret)
-    full = {"min": jnp.min, "max": jnp.max, "sum": jnp.sum}[op]
-    return full(part)
 
 
 def tuning_space(n: int, vmem_bytes: int = 64 * 2**20,
@@ -78,4 +58,50 @@ def cost_model(cfg: dict, *, n: int, dtype_bytes: int = 4,
     return stream_us + steps * grid_overhead_us
 
 
-__all__ = ["reduce_1d", "tuning_space", "cost_model", "reduce_ref"]
+@dataclass(frozen=True)
+class ReductionTunable:
+    """``repro.tune`` Tunable: block_rows for an n-element reduction."""
+
+    n: int
+    op: str = "min"
+    dtype_bytes: int = 4
+    name: ClassVar[str] = "kernels.tuned_reduction"
+
+    def space(self) -> SearchSpace:
+        return tuning_space(self.n, dtype_bytes=self.dtype_bytes)
+
+    def cost(self, cfg: Mapping[str, Any]) -> float:
+        return cost_model(cfg, n=self.n, dtype_bytes=self.dtype_bytes)
+
+    def fingerprint(self) -> dict[str, Any]:
+        return {"tunable": self.name, "n": self.n, "op": self.op,
+                "dtype_bytes": self.dtype_bytes}
+
+
+@autotune(lambda x, **kw: ReductionTunable(n=int(x.shape[0]),
+                                           op=kw.get("op", "min"),
+                                           dtype_bytes=x.dtype.itemsize),
+          params=("block_rows",))
+@functools.partial(jax.jit, static_argnames=("op", "block_rows", "interpret"))
+def reduce_1d(x: jax.Array, *, op: str = "min", block_rows: int | None = None,
+              interpret: bool | None = None) -> jax.Array:
+    """Reduce a 1-D array with the Pallas kernel (minimum by default);
+    an omitted ``block_rows`` is auto-tuned (cached)."""
+
+    interpret = resolve_interpret(interpret)
+    ident = _identity(op, x.dtype)
+
+    n = x.shape[0]
+    tile = block_rows * _LANES
+    padded = -(-n // tile) * tile
+    if padded != n:
+        x = jnp.concatenate([x, jnp.full((padded - n,), ident, x.dtype)])
+    view = x.reshape(-1, _LANES)
+
+    part = reduce_rows(view, block_rows=block_rows, op=op, interpret=interpret)
+    full = {"min": jnp.min, "max": jnp.max, "sum": jnp.sum}[op]
+    return full(part)
+
+
+__all__ = ["reduce_1d", "ReductionTunable", "tuning_space", "cost_model",
+           "reduce_ref"]

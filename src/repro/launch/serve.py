@@ -15,7 +15,7 @@ import numpy as np
 
 from ..configs import get_config
 from ..models import build_model
-from ..runtime.serve import Server
+from ..runtime.serve import Server, choose_batch
 
 
 def main(argv=None) -> None:
@@ -28,6 +28,8 @@ def main(argv=None) -> None:
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=6)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--tune-batch", action="store_true",
+                    help="pick the slot count via repro.tune")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -36,7 +38,16 @@ def main(argv=None) -> None:
     api = build_model(cfg)
     params = api.init(jax.random.PRNGKey(args.seed))
 
-    server = Server(api, params, batch=args.batch, context=args.context)
+    batch = args.batch
+    if args.tune_batch:
+        batch, res = choose_batch(api, context=args.context,
+                                  requests=args.requests,
+                                  max_new=args.max_new)
+        print(f"[tune] batch={batch} modeled drain="
+              f"{res.t_min*1e3:.1f} ms (engine={res.engine}, "
+              f"cache {res.stats.get('cache', 'off')})")
+
+    server = Server(api, params, batch=batch, context=args.context)
     rng = np.random.default_rng(args.seed)
     for _ in range(args.requests):
         prompt = rng.integers(0, cfg.vocab, args.prompt_len).tolist()

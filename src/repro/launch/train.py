@@ -26,7 +26,7 @@ import numpy as np
 
 from ..configs import SHAPES, get_config
 from ..configs.base import ShapeSpec
-from ..core.tpu_machine import TPUWorkload, tune_distributed
+from ..core.tpu_machine import TPUWorkload
 from ..data import DataConfig, SyntheticLM
 from ..models import build_model
 from ..runtime import (LoopConfig, SimulatedFailure, TrainConfig,
@@ -60,19 +60,26 @@ def main(argv=None) -> None:
     microbatches = args.microbatches
     remat = cfg.remat
     if args.tune:
+        import math
+
+        from ..tune import tune as tune_api
         w = TPUWorkload(params=api.param_count(),
                         active_params=api.param_count(),
                         layers=cfg.n_layers, d_model=cfg.d_model,
                         seq=args.seq, global_batch=args.batch,
                         vocab=cfg.vocab)
-        best, t, _ = tune_distributed(w, chips_per_pod=max(
-            len(jax.devices()), 1))
-        microbatches = min(best.microbatches, args.batch)
-        remat = best.remat
+        res = tune_api(w.tunable(chips_per_pod=max(len(jax.devices()), 1)),
+                       engine="grid")
+        if not math.isfinite(res.t_min):
+            raise RuntimeError("no feasible configuration fits HBM")
+        best = res.best_config
+        microbatches = min(best["microbatches"], args.batch)
+        remat = best["remat"]
         cfg = cfg.replace(remat=remat)
         api = build_model(cfg)
         print(f"[tune] config: microbatches={microbatches} remat={remat} "
-              f"fsdp={best.fsdp} modeled step={t['total']*1e3:.2f} ms")
+              f"fsdp={best['fsdp']} modeled step={res.t_min*1e3:.2f} ms "
+              f"(engine={res.engine}, cache {res.stats.get('cache', 'off')})")
 
     tcfg = TrainConfig(lr=args.lr, warmup=max(2, args.steps // 20),
                        total_steps=args.steps, microbatches=microbatches)

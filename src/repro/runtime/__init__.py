@@ -1,10 +1,11 @@
 """Runtime: train step builder, fault-tolerant supervisor, serving."""
 
 from .loop import History, LoopConfig, SimulatedFailure, run_training
-from .serve import Request, Server
+from .serve import DecodeBatchTunable, Request, Server, choose_batch
 from .train import (TrainConfig, TrainState, abstract_train_state,
                     build_train_step, init_train_state)
 
 __all__ = ["History", "LoopConfig", "SimulatedFailure", "run_training",
-           "Request", "Server", "TrainConfig", "TrainState",
-           "abstract_train_state", "build_train_step", "init_train_state"]
+           "Request", "Server", "DecodeBatchTunable", "choose_batch",
+           "TrainConfig", "TrainState", "abstract_train_state",
+           "build_train_step", "init_train_state"]

@@ -15,12 +15,14 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Any, Callable
+from typing import Any, Callable, ClassVar, Mapping
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.search_space import Param, SearchSpace
+from ..core.tpu_machine import HBM_BW
 from ..models.api import ModelAPI
 
 
@@ -129,4 +131,65 @@ class Server:
         raise RuntimeError("serving did not drain")
 
 
-__all__ = ["Server", "Request"]
+# ---------------------------------------------------------------------------
+# serving-configuration tuning (repro.tune)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class DecodeBatchTunable:
+    """``repro.tune`` Tunable: the server's slot count.
+
+    Decode is HBM-bound: each engine tick re-streams the weights once
+    (amortized over every active slot) and reads each slot's KV cache.
+    More slots amortize the weight stream but add KV traffic and admit
+    waves of requests; the grid engine picks the drain-time optimum for
+    an expected load (request count × mean new tokens)."""
+
+    param_bytes: int
+    layers: int
+    d_model: int
+    context: int
+    requests: int
+    mean_new: int
+    max_batch: int = 64
+    dispatch_s: float = 50e-6
+    name: ClassVar[str] = "serve.decode_batch"
+
+    def space(self) -> SearchSpace:
+        sizes = []
+        b = 1
+        while b <= self.max_batch:
+            sizes.append(b)
+            b *= 2
+        return SearchSpace(params=[Param("batch", tuple(sizes))])
+
+    def cost(self, cfg: Mapping[str, Any]) -> float:
+        """Modeled seconds to drain the expected load."""
+
+        b = cfg["batch"]
+        weight_s = self.param_bytes / HBM_BW
+        kv_s = b * self.layers * self.context * self.d_model * 2 * 2 / HBM_BW
+        tick_s = weight_s + kv_s + self.dispatch_s
+        waves = -(-self.requests // b)
+        return waves * self.mean_new * tick_s
+
+    def fingerprint(self) -> dict[str, Any]:
+        return {"tunable": self.name, **dataclasses.asdict(self)}
+
+
+def choose_batch(api: ModelAPI, *, context: int, requests: int,
+                 max_new: int, cache="default"):
+    """Pick the slot count for :class:`Server` via ``repro.tune``;
+    returns ``(batch, TuneResult)``."""
+
+    from ..tune import tune as _tune
+    tb = DecodeBatchTunable(param_bytes=api.param_count() * 2,
+                            layers=api.cfg.n_layers, d_model=api.cfg.d_model,
+                            context=context, requests=requests,
+                            mean_new=max_new)
+    res = _tune(tb, engine="grid", cache=cache)
+    return int(res.best_config["batch"]), res
+
+
+__all__ = ["Server", "Request", "DecodeBatchTunable", "choose_batch"]

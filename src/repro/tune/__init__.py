@@ -1,0 +1,37 @@
+"""repro.tune — the unified auto-tuning API.
+
+The paper's four-step loop (model → property → search → counterexample
+extraction) packaged as one engine-pluggable front door:
+
+* :class:`Tunable` — the protocol every tunable workload implements
+  (``name``, ``space()``, ``cost(cfg)``, ``fingerprint()``, optional
+  ``measure(cfg)``),
+* :func:`tune` — the driver: ``tune(tunable, engine="sweep")``,
+* :func:`register_engine` / :func:`get_engine` — the engine registry
+  (``sweep``/``explorer``/``swarm``/``bnb``/``grid``/``bisect``),
+* :class:`TuningCache` — persistent tuned-config store keyed by tunable
+  fingerprint + platform (backend, chip generation) + engine,
+* :func:`autotune` — decorator resolving Pallas block sizes (and other
+  call-site parameters) from the cache at call time.
+
+Legacy entry points ``repro.core.AutoTuner`` / ``FunctionTuner`` remain
+as thin deprecated shims over this package.
+"""
+
+from ..core.autotuner import TuneResult
+from .api import tune
+from .cache import (TuningCache, cache_key, default_cache,
+                    platform_fingerprint, set_default_cache,
+                    tunable_fingerprint)
+from .decorators import autotune
+from .engines import (Engine, EngineError, available_engines, get_engine,
+                      register_engine)
+from .tunable import FunctionTunable, PlatformTunable, Tunable
+
+__all__ = [
+    "tune", "TuneResult", "Tunable", "FunctionTunable", "PlatformTunable",
+    "Engine", "EngineError", "register_engine", "get_engine",
+    "available_engines", "TuningCache", "cache_key", "default_cache",
+    "set_default_cache", "platform_fingerprint", "tunable_fingerprint",
+    "autotune",
+]

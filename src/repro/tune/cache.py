@@ -1,0 +1,189 @@
+"""Persistent tuned-configuration cache.
+
+Tuning is worth amortizing: the whole point of the paper's off-hardware
+method is that a configuration, once found, keeps paying for itself.
+:class:`TuningCache` stores ``TuneResult``s on disk keyed by
+
+* the tunable's :meth:`fingerprint` (problem identity + shape),
+* the platform (JAX backend + chip generation — a config tuned for a
+  v5e is not a config tuned for CPU interpret mode),
+* the engine name (engines may legitimately disagree, e.g. swarm's
+  randomized bound vs the exact sweep).
+
+The key is the SHA-256 of the canonical JSON of that document, so any
+shape/platform/engine change invalidates the entry naturally.  The store
+is one JSON file (atomic replace on write) with hit/miss counters.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import tempfile
+import time
+from pathlib import Path
+from typing import Any, Mapping
+
+from ..core.autotuner import TuneResult
+
+_SCHEMA = 1
+_ENV_VAR = "REPRO_TUNE_CACHE"
+_DEFAULT_PATH = "~/.cache/repro/tune_cache.json"
+
+
+def platform_fingerprint() -> dict[str, str]:
+    """Backend + chip generation the tuned config is valid for."""
+
+    try:
+        import jax
+        dev = jax.devices()[0]
+        return {"backend": jax.default_backend(),
+                "device_kind": str(getattr(dev, "device_kind", "unknown"))}
+    except Exception:                                  # pragma: no cover
+        return {"backend": "unknown", "device_kind": "unknown"}
+
+
+def tunable_fingerprint(tunable) -> dict[str, Any]:
+    """The tunable's own identity; falls back to name + lattice values
+    for objects that don't implement ``fingerprint()``."""
+
+    fp = getattr(tunable, "fingerprint", None)
+    if callable(fp):
+        return dict(fp())
+    space = tunable.space()
+    return {"tunable": getattr(tunable, "name", type(tunable).__name__),
+            "space": {p.name: list(p.values) for p in space.params}}
+
+
+def cache_key(tunable, engine: str,
+              params: Mapping[str, Any] | None = None
+              ) -> tuple[str, dict[str, Any]]:
+    """(sha256 hex key, the fingerprint document it hashes).
+
+    ``params`` carries engine arguments that change the answer
+    (``use_measure``, ``n_walks``, ``seed``, ``budget``, ...) so runs
+    with different search settings get distinct entries."""
+
+    doc = {"schema": _SCHEMA,
+           "tunable": tunable_fingerprint(tunable),
+           "platform": platform_fingerprint(),
+           "engine": engine}
+    if params:
+        doc["params"] = dict(params)
+    blob = json.dumps(doc, sort_keys=True, default=str)
+    return hashlib.sha256(blob.encode()).hexdigest(), doc
+
+
+class TuningCache:
+    """On-disk map: cache key -> tuned config + t_min (+ provenance)."""
+
+    def __init__(self, path: str | os.PathLike | None = None):
+        if path is None:
+            path = os.environ.get(_ENV_VAR, _DEFAULT_PATH)
+        self.path = Path(path).expanduser()
+        self.hits = 0
+        self.misses = 0
+        self._entries: dict[str, dict[str, Any]] = {}
+        self._load()
+
+    # -- persistence --------------------------------------------------------
+
+    def _load(self) -> None:
+        try:
+            doc = json.loads(self.path.read_text())
+            if doc.get("schema") == _SCHEMA:
+                self._entries = dict(doc.get("entries", {}))
+        except (OSError, ValueError):
+            self._entries = {}
+
+    def save(self) -> None:
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        doc = {"schema": _SCHEMA, "entries": self._entries}
+        fd, tmp = tempfile.mkstemp(dir=str(self.path.parent),
+                                   prefix=self.path.name, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(doc, f, indent=1, sort_keys=True, default=str)
+            os.replace(tmp, self.path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    # -- lookup/store --------------------------------------------------------
+
+    def get(self, key: str) -> dict[str, Any] | None:
+        entry = self._entries.get(key)
+        if entry is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        return entry
+
+    def put(self, key: str, result: TuneResult,
+            fingerprint: Mapping[str, Any] | None = None) -> None:
+        witness = None
+        if result.witness is not None:
+            w = result.witness
+            witness = {"time": w.time, "config": dict(w.config),
+                       "trail": list(w.trail), "depth": w.depth}
+        # full result provenance minus the bulky grid trace
+        stats = {k: v for k, v in result.stats.items() if k != "trace"}
+        self._entries[key] = {
+            "best_config": dict(result.best_config),
+            "t_min": result.t_min,
+            "engine": result.engine,
+            "oracle_calls": result.oracle_calls,
+            "elapsed_s": result.elapsed_s,
+            "stats": stats,
+            "witness": witness,
+            "created": time.time(),
+            "fingerprint": dict(fingerprint) if fingerprint else None,
+        }
+        self.save()
+
+    def clear(self) -> None:
+        self._entries.clear()
+        if self.path.exists():
+            self.path.unlink()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._entries
+
+    @property
+    def stats(self) -> dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses,
+                "entries": len(self._entries)}
+
+
+_default_cache: TuningCache | None = None
+
+
+def default_cache() -> TuningCache:
+    """Process-wide cache (path from $REPRO_TUNE_CACHE, else
+    ``~/.cache/repro/tune_cache.json``), created on first use."""
+
+    global _default_cache
+    if _default_cache is None:
+        _default_cache = TuningCache()
+    return _default_cache
+
+
+def set_default_cache(cache: TuningCache | None) -> TuningCache | None:
+    """Swap the process-wide cache (tests point it at a temp dir);
+    returns the previous one."""
+
+    global _default_cache
+    prev = _default_cache
+    _default_cache = cache
+    return prev
+
+
+__all__ = ["TuningCache", "cache_key", "tunable_fingerprint",
+           "platform_fingerprint", "default_cache", "set_default_cache"]

@@ -1,0 +1,14 @@
+"""Shared test setup: point the process-wide tuning cache at a temp dir
+so ``@autotune``-decorated kernels never read/write the developer's
+``~/.cache/repro`` store during the suite."""
+
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="session")
+def _isolated_tuning_cache(tmp_path_factory):
+    from repro.tune import TuningCache, set_default_cache
+    path = tmp_path_factory.mktemp("tune") / "cache.json"
+    prev = set_default_cache(TuningCache(path))
+    yield
+    set_default_cache(prev)

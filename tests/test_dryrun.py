@@ -92,6 +92,12 @@ def test_collective_bytes_parser():
 # scan trip-count semantics (the composition premise)
 # ---------------------------------------------------------------------------
 
+def _flops(compiled) -> float:
+    # jax < 0.5 returns a one-element list of dicts; newer a dict
+    ca = compiled.cost_analysis()
+    return (ca[0] if isinstance(ca, (list, tuple)) else ca)["flops"]
+
+
 def test_cost_analysis_counts_scan_body_once():
     def f(x, ws):
         y, _ = jax.lax.scan(lambda c, w: (c @ w, None), x, ws)
@@ -99,7 +105,7 @@ def test_cost_analysis_counts_scan_body_once():
 
     x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
     ws = jax.ShapeDtypeStruct((10, 64, 64), jnp.float32)
-    scan_flops = jax.jit(f).lower(x, ws).compile().cost_analysis()["flops"]
+    scan_flops = _flops(jax.jit(f).lower(x, ws).compile())
 
     def g(x, ws):
         y = x
@@ -107,7 +113,7 @@ def test_cost_analysis_counts_scan_body_once():
             y = y @ ws[i]
         return y.sum()
 
-    unrolled = jax.jit(g).lower(x, ws).compile().cost_analysis()["flops"]
+    unrolled = _flops(jax.jit(g).lower(x, ws).compile())
     assert scan_flops < unrolled / 5     # body counted ~once, not 10x
     # composition: module + (trips-1) * body ~= unrolled
     body = 2 * 64 ** 3

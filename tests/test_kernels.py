@@ -1,12 +1,12 @@
 """Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracles,
 swept over shapes/dtypes + hypothesis property tests."""
 
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+from _hypothesis_stub import hypothesis, st  # skips property tests if absent
 
 from repro.kernels.flash_attention.ops import attention_ref, flash_attention
 from repro.kernels.matmul_tuned.ops import matmul_ref, matmul_tuned

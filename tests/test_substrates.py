@@ -3,13 +3,12 @@ fault-tolerant loop (failure injection, straggler re-dispatch, restart)."""
 
 import os
 
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _hypothesis_stub import hypothesis, st  # skips property tests if absent
 from repro.checkpoint import CheckpointManager, load_checkpoint, save_checkpoint
 from repro.configs import get_config
 from repro.data import DataConfig, SyntheticLM
