@@ -1,0 +1,68 @@
+"""Modeled-vs-measured tuning: the ``measure`` engine end-to-end.
+
+The paper's §8 concedes the platform model is an abstraction; this
+benchmark closes the loop the way the related work does (Falch & Elster;
+"Tuning the Tuner"): the cost model shortlists the lattice off-hardware,
+the hardware ranks the shortlist by wall-clock.  The table shows both
+times per candidate and whether the model's pick survived measurement —
+interpret mode on CPU, compiled kernels on TPU, same code path.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.kernels.matmul_tuned.ops import MatmulTunable
+from repro.kernels.tuned_reduction.ops import ReductionTunable
+from repro.tune import tune
+
+SMOKE_CASES = [
+    ("matmul_256", MatmulTunable(256, 256, 256)),
+    ("reduce_64k", ReductionTunable(64 * 1024)),
+]
+
+FULL_CASES = SMOKE_CASES + [
+    ("matmul_512", MatmulTunable(512, 512, 512)),
+    ("reduce_1m", ReductionTunable(1 << 20)),
+]
+
+
+def run(csv: list[str], cases=None, top_k: int = 2, repeats: int = 1) -> None:
+    print("\n== measure engine: modeled shortlist -> wall-clock verdict ==")
+    for label, tb in (cases or SMOKE_CASES):
+        t0 = time.perf_counter()
+        res = tune(tb, engine="measure", cache=None, budget=top_k,
+                   repeats=repeats)
+        dt = time.perf_counter() - t0
+
+        modeled = res.stats["modeled_pick"]
+        measured = res.stats["measured_pick"]
+        agree = modeled["config"] == measured["config"]
+        print(f"\n{label}: {res.stats['evaluated']} configs modeled, "
+              f"top-{res.stats['shortlist']} measured ({dt:.2f}s)")
+        print(f"  {'config':<36} {'modeled_us':>11} {'measured_us':>12}")
+        for c in res.stats["candidates"]:
+            marks = []
+            if c["config"] == modeled["config"]:
+                marks.append("model pick")
+            if c["config"] == measured["config"]:
+                marks.append("wall-clock winner")
+            print(f"  {str(c['config']):<36} {c['modeled']:>11.2f} "
+                  f"{c['measured']:>12.1f}  {', '.join(marks)}")
+        print(f"  model and hardware {'agree' if agree else 'DISAGREE'}; "
+              f"winner measured {measured['measured']:.1f} us "
+              f"(model pick measured {modeled['measured']:.1f} us)")
+        csv.append(f"measure_{label},{res.t_min:.1f},"
+                   f"agree={agree};modeled_us={modeled['modeled']:.2f};"
+                   f"model_pick_measured_us={modeled['measured']:.1f}")
+
+
+def main() -> None:
+    csv: list[str] = []
+    run(csv, cases=FULL_CASES, top_k=4, repeats=3)
+    for line in csv:
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

@@ -5,6 +5,8 @@ end (per-benchmark sections print richer tables above).
 ``--smoke`` runs a CI-sized subset: one distributed-tuning cell through
 the full ``repro.tune`` path (grid engine + cache hit/miss) plus the
 Table 3 model sweep — end-to-end tuning in well under a minute.
+``--measure`` runs only the modeled-vs-measured comparison (the
+``measure`` engine on real kernels, interpret mode on CPU, tiny shapes).
 """
 
 from __future__ import annotations
@@ -17,17 +19,23 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="CI subset: one tuning benchmark end-to-end")
+    ap.add_argument("--measure", action="store_true",
+                    help="measure-engine smoke only (modeled vs measured)")
     args = ap.parse_args(argv)
 
-    from benchmarks import (bench_roofline, bench_sweep, bench_table1,
-                            bench_table2, bench_table3, bench_tpu_tuning)
+    from benchmarks import (bench_measure, bench_roofline, bench_sweep,
+                            bench_table1, bench_table2, bench_table3,
+                            bench_tpu_tuning)
 
     csv: list[str] = []
     t0 = time.perf_counter()
-    if args.smoke:
+    if args.measure:
+        bench_measure.run(csv)
+    elif args.smoke:
         bench_table3.run(csv)
         bench_tpu_tuning.run(csv, cells=[("minitron-8b", "train_4k", 1)])
         bench_tpu_tuning.run_cache(csv)
+        bench_measure.run(csv)
     else:
         bench_table1.run(csv)
         bench_table2.run(csv)
@@ -36,6 +44,8 @@ def main(argv=None) -> None:
         bench_sweep.run_warp_ablation(csv)
         bench_tpu_tuning.run(csv)
         bench_tpu_tuning.run_cache(csv)
+        bench_measure.run(csv, cases=bench_measure.FULL_CASES,
+                          top_k=4, repeats=3)
         bench_roofline.run(csv)
     dt = time.perf_counter() - t0
 

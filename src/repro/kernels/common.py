@@ -4,9 +4,15 @@
 Every Pallas wrapper takes ``interpret: bool | None``; ``None`` means
 "interpret mode iff no real accelerator" so the same call sites run on
 CPU (interpret) and TPU (compiled) unchanged.
+
+:func:`time_fn` is the one wall-clock discipline every Tunable's
+``measure(cfg)`` uses: warmup calls absorb compilation, each timed call
+blocks on its result, and the median survives scheduler noise.
 """
 
 from __future__ import annotations
+
+import time
 
 import jax
 
@@ -21,4 +27,23 @@ def resolve_interpret(interpret: bool | None) -> bool:
     return is_cpu() if interpret is None else bool(interpret)
 
 
-__all__ = ["is_cpu", "resolve_interpret"]
+def time_fn(fn, *, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-clock microseconds of ``fn()``.
+
+    ``fn`` returns a jax value (or pytree); each call is synchronized
+    with ``jax.block_until_ready`` so dispatch-only time is never
+    reported.  ``warmup`` un-timed calls run first (jit/Pallas
+    compilation, cache warm)."""
+
+    for _ in range(max(0, warmup)):
+        jax.block_until_ready(fn())
+    samples = []
+    for _ in range(max(1, iters)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        samples.append((time.perf_counter() - t0) * 1e6)
+    samples.sort()
+    return samples[len(samples) // 2]
+
+
+__all__ = ["is_cpu", "resolve_interpret", "time_fn"]

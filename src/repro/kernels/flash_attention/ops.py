@@ -13,10 +13,11 @@ from dataclasses import dataclass
 from typing import Any, ClassVar, Mapping
 
 import jax
+import jax.numpy as jnp
 
 from ...core.search_space import Param, SearchSpace
 from ...tune import autotune
-from ..common import resolve_interpret
+from ..common import resolve_interpret, time_fn
 from .kernel import flash_attention_bhsd
 from .ref import attention_ref
 
@@ -89,6 +90,19 @@ class FlashAttentionTunable:
         return cost_model(cfg, S=self.S, D=self.D, BH=self.BH,
                           causal=self.causal, window=self.window,
                           dtype_bytes=self.dtype_bytes)
+
+    def measure(self, cfg: Mapping[str, Any], *, warmup: int = 1,
+                iters: int = 3) -> float:
+        """Wall-clock microseconds of the real kernel at this block
+        config (hardware oracle; interpret mode on CPU)."""
+
+        dtype = jnp.bfloat16 if self.dtype_bytes == 2 else jnp.float32
+        q = jnp.ones((1, self.BH, self.S, self.D), dtype)
+        run = lambda: _flash_call(q, q, q, causal=self.causal,
+                                  window=self.window,
+                                  block_q=cfg["block_q"],
+                                  block_k=cfg["block_k"], interpret=None)
+        return time_fn(run, warmup=warmup, iters=iters)
 
     def fingerprint(self) -> dict[str, Any]:
         return {"tunable": self.name, "S": self.S, "D": self.D,

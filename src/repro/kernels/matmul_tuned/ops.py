@@ -10,7 +10,6 @@ afterwards.  Explicit block sizes bypass tuning entirely.
 from __future__ import annotations
 
 import functools
-import time
 from dataclasses import dataclass
 from typing import Any, ClassVar, Mapping
 
@@ -19,7 +18,7 @@ import jax.numpy as jnp
 
 from ...core.search_space import Param, SearchSpace
 from ...tune import autotune
-from ..common import resolve_interpret
+from ..common import resolve_interpret, time_fn
 from .kernel import matmul
 from .ref import matmul_ref
 
@@ -89,20 +88,17 @@ class MatmulTunable:
         return cost_model(cfg, M=self.M, N=self.N, K=self.K,
                           dtype_bytes=self.dtype_bytes)
 
-    def measure(self, cfg: Mapping[str, Any], *, iters: int = 2) -> float:
-        """Wall-clock microseconds of the real kernel (hardware oracle)."""
+    def measure(self, cfg: Mapping[str, Any], *, warmup: int = 1,
+                iters: int = 3) -> float:
+        """Wall-clock microseconds of the real kernel at this block
+        config (hardware oracle; interpret mode on CPU)."""
 
         dtype = jnp.bfloat16 if self.dtype_bytes == 2 else jnp.float32
         a = jnp.ones((self.M, self.K), dtype)
         b = jnp.ones((self.K, self.N), dtype)
         run = lambda: _matmul_call(a, b, bm=cfg["bm"], bn=cfg["bn"],
                                    bk=cfg["bk"], interpret=None)
-        run().block_until_ready()
-        t0 = time.perf_counter()
-        for _ in range(iters):
-            out = run()
-        out.block_until_ready()
-        return (time.perf_counter() - t0) / iters * 1e6
+        return time_fn(run, warmup=warmup, iters=iters)
 
     def fingerprint(self) -> dict[str, Any]:
         return {"tunable": self.name, "M": self.M, "N": self.N, "K": self.K,

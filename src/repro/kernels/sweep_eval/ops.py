@@ -15,7 +15,7 @@ import jax.numpy as jnp
 from ...core.search_space import Param, SearchSpace
 from ...core.wave_model import WaveParams
 from ...tune import autotune
-from ..common import resolve_interpret
+from ..common import resolve_interpret, time_fn
 from .kernel import SENTINEL, sweep_eval_rows
 from .ref import sweep_ref
 
@@ -60,6 +60,19 @@ class SweepEvalTunable:
 
     def cost(self, cfg: Mapping[str, Any]) -> float:
         return cost_model(cfg, n=self.n)
+
+    def measure(self, cfg: Mapping[str, Any], *, warmup: int = 1,
+                iters: int = 3) -> float:
+        """Wall-clock microseconds of the real sweep kernel at this
+        block config, on a representative platform (timing depends on
+        the lattice size and block_rows, not the wave parameters)."""
+
+        p = WaveParams(size=max(4, self.n), NP=4, GMT=4, kind="minimum")
+        wg = jnp.ones((self.n,), jnp.int32)
+        ts = jnp.ones((self.n,), jnp.int32)
+        run = lambda: sweep_eval(wg, ts, p,
+                                 block_rows=cfg["block_rows"], interpret=None)
+        return time_fn(run, warmup=warmup, iters=iters)
 
     def fingerprint(self) -> dict[str, Any]:
         return {"tunable": self.name, "n": self.n}

@@ -21,7 +21,7 @@ import jax.numpy as jnp
 
 from ...core.search_space import Param, SearchSpace
 from ...tune import autotune
-from ..common import resolve_interpret
+from ..common import resolve_interpret, time_fn
 from .kernel import _combine, _identity, reduce_rows
 from .ref import reduce_ref
 
@@ -72,6 +72,17 @@ class ReductionTunable:
 
     def cost(self, cfg: Mapping[str, Any]) -> float:
         return cost_model(cfg, n=self.n, dtype_bytes=self.dtype_bytes)
+
+    def measure(self, cfg: Mapping[str, Any], *, warmup: int = 1,
+                iters: int = 3) -> float:
+        """Wall-clock microseconds of the real kernel at this block
+        config (hardware oracle; interpret mode on CPU)."""
+
+        dtype = jnp.float32 if self.dtype_bytes == 4 else jnp.bfloat16
+        x = jnp.ones((self.n,), dtype)
+        run = lambda: reduce_1d(x, op=self.op,
+                                block_rows=cfg["block_rows"], interpret=None)
+        return time_fn(run, warmup=warmup, iters=iters)
 
     def fingerprint(self) -> dict[str, Any]:
         return {"tunable": self.name, "n": self.n, "op": self.op,

@@ -30,6 +30,10 @@ def main(argv=None) -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--tune-batch", action="store_true",
                     help="pick the slot count via repro.tune")
+    ap.add_argument("--tune-engine", default="grid",
+                    help="tuning engine for --tune-batch; 'measure' "
+                         "refines the modeled pick with real server "
+                         "drains (wall-clock)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -42,9 +46,11 @@ def main(argv=None) -> None:
     if args.tune_batch:
         batch, res = choose_batch(api, context=args.context,
                                   requests=args.requests,
-                                  max_new=args.max_new)
-        print(f"[tune] batch={batch} modeled drain="
-              f"{res.t_min*1e3:.1f} ms (engine={res.engine}, "
+                                  max_new=args.max_new, params=params,
+                                  engine=args.tune_engine)
+        prov = res.stats.get("provenance", "modeled")
+        print(f"[tune] batch={batch} {prov} drain="
+              f"{res.t_min / 1e3:.1f} ms (engine={res.engine}, "
               f"cache {res.stats.get('cache', 'off')})")
 
     server = Server(api, params, batch=batch, context=args.context)

@@ -124,11 +124,18 @@ class ModelAPI:
 
     def decode_step(self, params, state, tokens: jax.Array,
                     cur_len: jax.Array):
-        """tokens: (B, 1) -> (logits (B, V), new state)."""
+        """tokens: (B, 1) -> (logits (B, V), new state).
+
+        ``cur_len`` is a scalar token count, or a (B,) vector of
+        per-slot counts — the continuous-batching server feeds each
+        slot's own position so mixed-progress slots decode correctly
+        in one batch."""
 
         cfg = self.cfg
         kinds, _ = _block_plan(cfg)
         x = jnp.take(params["embed"], tokens, axis=0)       # (B,1,d)
+        cur_len = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32),
+                                   (tokens.shape[0],))
         if cfg.is_encdec:
             x = x + _sinusoid_at(cur_len, cfg.d_model, x.dtype)
 
@@ -247,10 +254,14 @@ def make_decode_body(cfg: ArchConfig, kinds: list[str], cur_len: jax.Array):
 
 
 def _sinusoid_at(pos: jax.Array, d: int, dtype) -> jax.Array:
+    """Sinusoidal embedding at absolute position(s): scalar -> (1,1,d)
+    broadcastable, (B,) vector -> (B,1,d) per-slot."""
+
+    pos = jnp.atleast_1d(jnp.asarray(pos, jnp.float32))         # (B,)
     dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
-    ang = pos.astype(jnp.float32) / jnp.power(10000.0, 2 * dim / d)
+    ang = pos[:, None] / jnp.power(10000.0, 2 * dim / d)        # (B, d/2)
     return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1
-                           ).astype(dtype)[None]
+                           ).astype(dtype)[:, None, :]
 
 
 def build_model(cfg: ArchConfig) -> ModelAPI:

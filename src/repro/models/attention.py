@@ -2,8 +2,10 @@
 full-sequence (train / prefill) and single-token cached decode paths.
 
 Pure-JAX math by default (XLA fuses this well on TPU); the Pallas flash
-kernel (`repro.kernels.flash_attention`) is an opt-in runtime path via
-``use_flash=True`` for TPU execution.
+kernel (`repro.kernels.flash_attention`) is the opt-in runtime path via
+``use_flash=True`` — block sizes resolve through ``@autotune`` and the
+persistent tuning cache, interpret mode keeps it runnable on CPU, and
+shapes the kernel cannot tile fall back to the pure-JAX math.
 """
 
 from __future__ import annotations
@@ -83,13 +85,19 @@ def _sdpa_qchunked(q, k, v, positions, scale, *, causal, window,
     pad = nc * chunk - S
     if pad:
         q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        # padded queries mask out every key (position -1 precedes all
+        # keys under the causal mask); their rows are sliced off below
+        positions = jnp.pad(positions, ((0, 0), (0, pad)),
+                            constant_values=-1)
     qs = q.reshape(B, H, nc, chunk, hd).transpose(2, 0, 1, 3, 4)
-    ki = positions[:, None, None, :]                    # (B,1,1,S)
+    # the caller's per-query positions, chunked alongside q — the mask
+    # must honor them (offset prefill), not assume 0-based contiguity
+    ps = positions.reshape(B, nc, chunk).transpose(1, 0, 2)  # (nc,B,chunk)
+    ki = positions[:, None, None, :S]                   # (B,1,1,S)
 
     def one(args):
-        i, qc = args
-        qi = (i * chunk + jnp.arange(chunk, dtype=jnp.int32)
-              )[None, None, :, None]
+        qc, pc = args
+        qi = pc[:, None, :, None]                       # (B,1,chunk,1)
         if causal:
             m = ki <= qi
             if window is not None:
@@ -98,16 +106,46 @@ def _sdpa_qchunked(q, k, v, positions, scale, *, causal, window,
             m = jnp.ones((1, 1, 1, S), bool)
         return _sdpa(qc, k, v, m, scale)
 
-    out = jax.lax.map(one, (jnp.arange(nc), qs))        # (nc,B,H,chunk,hd)
+    out = jax.lax.map(one, (qs, ps))                    # (nc,B,H,chunk,hd)
     out = out.transpose(1, 2, 0, 3, 4).reshape(B, H, nc * chunk, hd)
     return out[:, :, :S]
 
 
+def _flash_supported(S: int) -> bool:
+    """Can the Pallas flash kernel serve this full-sequence call?  The
+    kernel tiles S into >=128 blocks (S must divide) and lowers for TPU
+    — interpret mode covers CPU; other backends fall back."""
+
+    return S % 128 == 0 and jax.default_backend() in ("cpu", "tpu")
+
+
+def _positions_standard(positions: jax.Array, S: int) -> bool:
+    """The flash kernel masks by absolute 0-based indices, so it
+    requires ``positions == arange(S)``.  Concrete arrays are checked
+    (offset prefill falls back to the pure-JAX path, which honors the
+    caller's positions); under a trace the contiguity precondition is
+    the caller's documented responsibility."""
+
+    if isinstance(positions, jax.core.Tracer):
+        return True
+    return bool(jnp.all(positions ==
+                        jnp.arange(S, dtype=positions.dtype)))
+
+
 def attention(p: dict, cfg: ArchConfig, x: jax.Array, positions: jax.Array,
               *, causal: bool = True, window: int | None = None,
-              x_kv: jax.Array | None = None) -> jax.Array:
+              x_kv: jax.Array | None = None,
+              use_flash: bool = False) -> jax.Array:
     """Full-sequence attention.  ``x_kv`` switches to cross-attention
-    (no causal mask, no rope on kv positions beyond their own index)."""
+    (no causal mask, no rope on kv positions beyond their own index).
+
+    ``use_flash=True`` routes self-attention through the ``@autotune``d
+    Pallas flash kernel (block sizes from the tuning cache; interpret
+    mode on CPU).  The kernel derives its mask from absolute 0-based
+    query/key indices, so the flash path requires the standard
+    contiguous ``positions == arange(S)`` of train/prefill; unsupported
+    shapes/backends fall back to the pure-JAX math.
+    """
 
     B, S, d = x.shape
     cross = x_kv is not None
@@ -122,7 +160,14 @@ def attention(p: dict, cfg: ArchConfig, x: jax.Array, positions: jax.Array,
     k = lc(k, "batch", "heads", "seq", None)
 
     Skv = xkv.shape[1]
-    if (not cross) and causal and S > Q_CHUNK_THRESHOLD:
+    if use_flash and not cross and _flash_supported(S) \
+            and _positions_standard(positions, S):
+        from ..kernels.flash_attention.ops import flash_attention
+        # window only applies under causality in the pure-JAX paths;
+        # match that here so use_flash never changes semantics
+        o = flash_attention(q, k, v, causal=causal,
+                            window=window if causal else None)
+    elif (not cross) and causal and S > Q_CHUNK_THRESHOLD:
         o = _sdpa_qchunked(q, k, v, positions, cfg.hd ** -0.5,
                            causal=True, window=window)
     else:
@@ -167,35 +212,40 @@ def decode_attention(p: dict, cfg: ArchConfig, x: jax.Array, cache: dict,
 
     x: (B, 1, d); cache["k"/"v"]: (B, Hkv, C, hd) where C is the cache
     length (= window size for SWA — a ring buffer — else max context);
-    cur_len: scalar count of tokens already in the cache.  Keys are
+    cur_len: count of tokens already in the cache — a scalar, or a (B,)
+    vector of per-slot counts so mixed-progress serving slots each get
+    their own RoPE rotation, ring slot, and validity mask.  Keys are
     stored post-RoPE.  Returns (output, updated cache)."""
 
     B, one, d = x.shape
     C = cache["k"].shape[2]
-    positions = jnp.full((B, 1), cur_len, jnp.int32)
+    cur_len = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32), (B,))
+    positions = cur_len[:, None]                  # (B, 1)
     q, k_new, v_new = _project_qkv(p, cfg, x, x)
     if cfg.use_rope:
         q = rope(q, positions, cfg.rope_theta)
         k_new = rope(k_new, positions, cfg.rope_theta)
 
-    slot = jnp.mod(cur_len, C)                    # ring for SWA
+    slot = jnp.mod(cur_len, C)                    # (B,) ring for SWA
     # one-hot masked update instead of dynamic_update_slice: elementwise,
     # so it stays local under ANY cache sharding (dynamic updates on a
     # sharded dim made GSPMD replicate the whole cache — §Perf cell B)
-    hot = (jnp.arange(C) == slot)[None, None, :, None]
+    hot = (jnp.arange(C)[None, :] == slot[:, None])[:, None, :, None]
     k = jnp.where(hot, k_new.astype(cache["k"].dtype), cache["k"])
     v = jnp.where(hot, v_new.astype(cache["v"].dtype), cache["v"])
     new_cache = {"k": k, "v": v}
 
-    # validity: slot i last held absolute position cur_len - ((slot-i) mod C)
-    idx = jnp.arange(C)
+    # validity per slot: ring index i last held absolute position
+    # cur_len[b] - ((slot[b] - i) mod C)
+    idx = jnp.arange(C)[None, :]                  # (1, C)
+    cl = cur_len[:, None]                         # (B, 1)
     if window is not None:
-        abs_pos = cur_len - jnp.mod(slot - idx, C)
-        valid = (abs_pos >= jnp.maximum(0, cur_len - window + 1)) & \
-                (abs_pos <= cur_len)
+        abs_pos = cl - jnp.mod(slot[:, None] - idx, C)
+        valid = (abs_pos >= jnp.maximum(0, cl - window + 1)) & \
+                (abs_pos <= cl)
     else:
-        valid = idx <= cur_len
-    mask = valid[None, None, None, :]
+        valid = idx <= cl                         # (B, C)
+    mask = valid[:, None, None, :]
 
     # grouped GQA attention: contract q head-groups against the kv-head
     # cache directly — jnp.repeat's broadcast made GSPMD all-gather the

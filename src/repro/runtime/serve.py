@@ -47,13 +47,11 @@ class Server:
         self.queue: list[Request] = []
         self.completed: list[Request] = []
 
-        # jitted one-token step over the whole slot batch
+        # jitted one-token step over the whole slot batch; positions is
+        # the (batch,) per-slot position vector — decode_step threads it
+        # through RoPE, the ring-cache slot, and the validity mask, so
+        # mixed-progress slots coexist correctly in one batch
         def step(params, state, tokens, positions):
-            # per-slot positions: vmap the single-position decode over slots
-            # by running with the max position and per-slot masks is complex;
-            # instead decode_step uses a single cur_len — we keep per-slot
-            # correctness by feeding each slot's own position through the
-            # batched position argument of the cache update.
             return api.decode_step(params, state, tokens, positions)
 
         self._step = jax.jit(step)
@@ -104,12 +102,9 @@ class Server:
                 tokens[s, 0] = req.prompt[cur]       # prompt consumption
             else:
                 tokens[s, 0] = req.out[-1] if req.out else 0
-        # NOTE: slots share a single cur_len scalar per tick; we tick slots
-        # in lock-step using the max position and per-slot ring slots stay
-        # correct because admission resets a slot's region of the cache.
-        pos = int(self.slot_pos[active].max())
         logits, self.state = self._step(self.params, self.state,
-                                        jnp.asarray(tokens), jnp.int32(pos))
+                                        jnp.asarray(tokens),
+                                        jnp.asarray(self.slot_pos))
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
         for s in active:
             req = self.slot_req[s]
@@ -144,7 +139,12 @@ class DecodeBatchTunable:
     (amortized over every active slot) and reads each slot's KV cache.
     More slots amortize the weight stream but add KV traffic and admit
     waves of requests; the grid engine picks the drain-time optimum for
-    an expected load (request count × mean new tokens)."""
+    an expected load (request count × mean new tokens).
+
+    With ``api``/``params`` attached (``choose_batch(..., params=...)``)
+    the tunable also implements ``measure(cfg)`` — a real :class:`Server`
+    drain at that slot count — so ``engine="measure"`` can refine the
+    modeled pick against wall-clock."""
 
     param_bytes: int
     layers: int
@@ -154,6 +154,9 @@ class DecodeBatchTunable:
     mean_new: int
     max_batch: int = 64
     dispatch_s: float = 50e-6
+    # hardware-in-the-loop handles: excluded from identity/caching
+    api: Any = field(default=None, repr=False, compare=False)
+    params: Any = field(default=None, repr=False, compare=False)
     name: ClassVar[str] = "serve.decode_batch"
 
     def space(self) -> SearchSpace:
@@ -165,30 +168,60 @@ class DecodeBatchTunable:
         return SearchSpace(params=[Param("batch", tuple(sizes))])
 
     def cost(self, cfg: Mapping[str, Any]) -> float:
-        """Modeled seconds to drain the expected load."""
+        """Modeled microseconds to drain the expected load (same unit
+        as ``measure`` so modeled/measured entries are comparable)."""
 
         b = cfg["batch"]
         weight_s = self.param_bytes / HBM_BW
         kv_s = b * self.layers * self.context * self.d_model * 2 * 2 / HBM_BW
         tick_s = weight_s + kv_s + self.dispatch_s
         waves = -(-self.requests // b)
-        return waves * self.mean_new * tick_s
+        return waves * self.mean_new * tick_s * 1e6
+
+    def measure(self, cfg: Mapping[str, Any], *, warmup: int = 1,
+                iters: int = 1, prompt_len: int = 4) -> float:
+        """Wall-clock microseconds to drain the expected load through a
+        real :class:`Server` at this slot count (warmup drains absorb
+        the decode-step compile for the batch shape)."""
+
+        if self.api is None or self.params is None:
+            raise RuntimeError(
+                "DecodeBatchTunable.measure needs the model attached: "
+                "construct with api=/params= (choose_batch(..., params=...))")
+        from ..kernels.common import time_fn
+        plen = max(1, min(prompt_len, self.context - self.mean_new - 1))
+
+        def drain() -> None:
+            srv = Server(self.api, self.params,
+                         batch=int(cfg["batch"]), context=self.context)
+            for _ in range(self.requests):
+                srv.submit(list(range(1, plen + 1)), max_new=self.mean_new)
+            srv.run_until_drained()
+
+        return time_fn(drain, warmup=warmup, iters=iters)
 
     def fingerprint(self) -> dict[str, Any]:
-        return {"tunable": self.name, **dataclasses.asdict(self)}
+        fp = {f.name: getattr(self, f.name)
+              for f in dataclasses.fields(self) if f.compare}
+        return {"tunable": self.name, **fp}
 
 
 def choose_batch(api: ModelAPI, *, context: int, requests: int,
-                 max_new: int, cache="default"):
+                 max_new: int, cache="default", params=None,
+                 engine: str = "grid", **tune_kw):
     """Pick the slot count for :class:`Server` via ``repro.tune``;
-    returns ``(batch, TuneResult)``."""
+    returns ``(batch, TuneResult)``.
+
+    ``engine="measure"`` (requires ``params``) shortlists slot counts
+    through the drain-time model, then times real server drains and
+    returns the wall-clock winner."""
 
     from ..tune import tune as _tune
     tb = DecodeBatchTunable(param_bytes=api.param_count() * 2,
                             layers=api.cfg.n_layers, d_model=api.cfg.d_model,
                             context=context, requests=requests,
-                            mean_new=max_new)
-    res = _tune(tb, engine="grid", cache=cache)
+                            mean_new=max_new, api=api, params=params)
+    res = _tune(tb, engine=engine, cache=cache, **tune_kw)
     return int(res.best_config["batch"]), res
 
 

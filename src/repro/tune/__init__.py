@@ -8,7 +8,8 @@ extraction) packaged as one engine-pluggable front door:
   ``measure(cfg)``),
 * :func:`tune` — the driver: ``tune(tunable, engine="sweep")``,
 * :func:`register_engine` / :func:`get_engine` — the engine registry
-  (``sweep``/``explorer``/``swarm``/``bnb``/``grid``/``bisect``),
+  (``sweep``/``explorer``/``swarm``/``bnb``/``grid``/``bisect``/
+  ``measure`` — the last refines cost-model picks on real hardware),
 * :class:`TuningCache` — persistent tuned-config store keyed by tunable
   fingerprint + platform (backend, chip generation) + engine,
 * :func:`autotune` — decorator resolving Pallas block sizes (and other

@@ -45,8 +45,8 @@ def tune(tunable, engine: str = "auto", *, cache="default",
     tunable: an object implementing the :class:`~repro.tune.Tunable`
         protocol (``name``/``space``/``cost``/``fingerprint``).
     engine: registry name (``sweep``/``explorer``/``swarm``/``bnb``/
-        ``grid``/``bisect``/...); ``auto`` picks ``sweep`` for platform
-        tunables and ``grid`` otherwise.
+        ``grid``/``bisect``/``measure``/...); ``auto`` picks ``sweep``
+        for platform tunables and ``grid`` otherwise.
     cache: ``"default"`` (process-wide persistent cache), a
         :class:`TuningCache`, or ``None`` to disable caching.
     budget: engine-specific work bound (configs / states / walks).
@@ -75,17 +75,21 @@ def tune(tunable, engine: str = "auto", *, cache="default",
                                              config=dict(w["config"]),
                                              trail=tuple(w["trail"]),
                                              depth=w["depth"])
+                stats = {**hit.get("stats", {}), "cache": "hit", "key": key}
+                # measured-vs-modeled provenance survives the round-trip
+                stats.setdefault("provenance",
+                                 hit.get("provenance", "modeled"))
                 return TuneResult(best_config=dict(hit["best_config"]),
                                   t_min=hit["t_min"],
                                   engine=hit.get("engine", eng.name),
                                   oracle_calls=hit.get("oracle_calls", 0),
                                   elapsed_s=0.0, witness=witness,
-                                  stats={**hit.get("stats", {}),
-                                         "cache": "hit", "key": key})
+                                  stats=stats)
 
     t0 = _time.perf_counter()
     res = eng.run(tunable, budget=budget, **engine_kw)
     res.elapsed_s = _time.perf_counter() - t0
+    res.stats.setdefault("provenance", "modeled")
 
     if store is not None:
         store.put(key, res, fingerprint=doc)

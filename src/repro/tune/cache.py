@@ -13,15 +13,25 @@ method is that a configuration, once found, keeps paying for itself.
 The key is the SHA-256 of the canonical JSON of that document, so any
 shape/platform/engine change invalidates the entry naturally.  The store
 is one JSON file (atomic replace on write) with hit/miss counters.
+Writes are deferred: ``put`` only marks the store dirty, and the file is
+rewritten on explicit :meth:`save` or at interpreter exit — a sweep that
+stores N entries costs one serialization, not N (O(n²) before).
+
+Entries carry a ``provenance`` field — ``"modeled"`` for cost-model-only
+engines, ``"measured"`` when the result was ranked by wall-clock (the
+``measure`` engine) — so empirical picks stay distinguishable from
+modeled ones across runs.
 """
 
 from __future__ import annotations
 
+import atexit
 import hashlib
 import json
 import os
 import tempfile
 import time
+import weakref
 from pathlib import Path
 from typing import Any, Mapping
 
@@ -85,7 +95,9 @@ class TuningCache:
         self.hits = 0
         self.misses = 0
         self._entries: dict[str, dict[str, Any]] = {}
+        self._dirty = False
         self._load()
+        _live_caches.add(self)
 
     # -- persistence --------------------------------------------------------
 
@@ -97,7 +109,17 @@ class TuningCache:
         except (OSError, ValueError):
             self._entries = {}
 
+    @property
+    def dirty(self) -> bool:
+        """True when in-memory entries have not been flushed to disk."""
+
+        return self._dirty
+
     def save(self) -> None:
+        """Flush pending entries to disk (atomic replace).  ``put`` only
+        marks the store dirty; this runs on explicit call and — for
+        still-dirty caches — at interpreter exit."""
+
         self.path.parent.mkdir(parents=True, exist_ok=True)
         doc = {"schema": _SCHEMA, "entries": self._entries}
         fd, tmp = tempfile.mkstemp(dir=str(self.path.parent),
@@ -112,6 +134,7 @@ class TuningCache:
             except OSError:
                 pass
             raise
+        self._dirty = False
 
     # -- lookup/store --------------------------------------------------------
 
@@ -141,12 +164,14 @@ class TuningCache:
             "stats": stats,
             "witness": witness,
             "created": time.time(),
+            "provenance": result.stats.get("provenance", "modeled"),
             "fingerprint": dict(fingerprint) if fingerprint else None,
         }
-        self.save()
+        self._dirty = True
 
     def clear(self) -> None:
         self._entries.clear()
+        self._dirty = False
         if self.path.exists():
             self.path.unlink()
 
@@ -160,6 +185,21 @@ class TuningCache:
     def stats(self) -> dict[str, int]:
         return {"hits": self.hits, "misses": self.misses,
                 "entries": len(self._entries)}
+
+
+# every live cache, flushed (if dirty) at interpreter exit so deferred
+# puts are never lost on a normal shutdown
+_live_caches: "weakref.WeakSet[TuningCache]" = weakref.WeakSet()
+
+
+@atexit.register
+def _flush_dirty_caches() -> None:                     # pragma: no cover
+    for cache in list(_live_caches):
+        if cache.dirty:
+            try:
+                cache.save()
+            except OSError:
+                pass
 
 
 _default_cache: TuningCache | None = None

@@ -76,7 +76,7 @@ def autotune(make_tunable: Callable[..., Any], *, params: Sequence[str],
                 if best is not None:
                     return best
             except TypeError:
-                pass                      # unhashable tunable: no memo
+                memo_key = None           # unhashable tunable: no memo
             target = _PinnedTunable(tunable, pinned) if pinned else tunable
             res = _tune(target, engine=engine, cache=cache, **tune_kw)
             if memo_key is not None:

@@ -19,6 +19,7 @@ Engines shipped here:
 ========== ==================================================================
 ``grid``    exhaustive cost-model scan (any tunable; alias ``function``)
 ``bisect``  Fig. 1 bisection with a cost-table C_ex oracle (any tunable)
+``measure`` cost-model shortlist, wall-clock verdict (tunables with measure)
 ``sweep``   vectorized lattice sweep over the wave model (platform tunables)
 ``explorer`` explicit-state DFS, SPIN-faithful (platform tunables)
 ``swarm``   Fig. 5 randomized bounded search (platform tunables)
@@ -28,6 +29,7 @@ Engines shipped here:
 
 from __future__ import annotations
 
+import inspect
 import math
 from typing import Any, Mapping, Type
 
@@ -213,6 +215,87 @@ class BisectEngine(Engine):
                           stats={"evaluated": len(table)})
 
 
+@register_engine("measure")
+class MeasureEngine(Engine):
+    """Model-guided empirical tuning — the §8 concession closed.
+
+    The cost model is an abstraction of the platform; real machines
+    disagree with it in the tail.  This engine uses the model for what
+    it is good at (pruning the lattice off-hardware) and the hardware
+    for what only it can answer (the final ranking): score every
+    configuration through ``cost``, shortlist the ``top_k`` best
+    modeled points, then time each candidate for real through the
+    tunable's ``measure(cfg)`` — median of ``repeats`` calls, with the
+    warmup/`block_until_ready` discipline inside ``measure`` itself —
+    and return the wall-clock winner.
+
+    The shortlist always contains the pure cost-model pick, so the
+    measured winner's measured time is ≤ the measured time of the
+    modeled pick by construction.  ``budget`` bounds the shortlist
+    size (overriding ``top_k``); ``stats`` records both the modeled
+    and the measured ranking (``provenance="measured"``), which the
+    :class:`~repro.tune.TuningCache` persists so empirical picks stay
+    distinguishable from modeled ones.
+    """
+
+    def run(self, tunable, *, budget: int | None = None, top_k: int = 4,
+            repeats: int = 3) -> TuneResult:
+        measure = getattr(tunable, "measure", None)
+        if not callable(measure):
+            raise EngineError(
+                f"engine 'measure' needs a tunable with a measure(cfg) "
+                f"method (hardware-in-the-loop oracle); "
+                f"got {type(tunable).__name__}")
+
+        scored: list[tuple[float, dict]] = []
+        for cfg in tunable.space():
+            t = tunable.cost(cfg)
+            if math.isfinite(t):
+                scored.append((t, dict(cfg)))
+        if not scored:
+            raise RuntimeError("empty search space (all configs infeasible)")
+        scored.sort(key=lambda e: e[0])
+
+        k = top_k if budget is None else budget
+        k = max(1, min(len(scored), k))
+        # warm up once per candidate, not once per repeat: after the
+        # first call the jit/compile caches are hot, so later repeats
+        # ask measure to skip its internal warmup when it supports it
+        try:
+            warmup_aware = "warmup" in inspect.signature(measure).parameters
+        except (TypeError, ValueError):                # pragma: no cover
+            warmup_aware = False
+        candidates: list[dict[str, Any]] = []
+        for modeled, cfg in scored[:k]:
+            times = []
+            for rep in range(max(1, repeats)):
+                kw = {"warmup": 0} if (rep and warmup_aware) else {}
+                times.append(float(measure(cfg, **kw)))
+            times.sort()
+            candidates.append({"config": cfg, "modeled": modeled,
+                               "measured": times[len(times) // 2],
+                               "samples": times})
+        best = min(candidates, key=lambda c: c["measured"])
+        modeled_pick = candidates[0]            # scored[0] = model's argmin
+        return TuneResult(
+            best_config=dict(best["config"]), t_min=best["measured"],
+            engine=self.name,
+            oracle_calls=len(candidates) * max(1, repeats),
+            stats={"provenance": "measured",
+                   "evaluated": len(scored), "shortlist": k,
+                   "repeats": repeats,
+                   "modeled_pick": {"config": dict(modeled_pick["config"]),
+                                    "modeled": modeled_pick["modeled"],
+                                    "measured": modeled_pick["measured"]},
+                   "measured_pick": {"config": dict(best["config"]),
+                                     "modeled": best["modeled"],
+                                     "measured": best["measured"]},
+                   "candidates": [{"config": dict(c["config"]),
+                                   "modeled": c["modeled"],
+                                   "measured": c["measured"]}
+                                  for c in candidates]})
+
+
 # ---------------------------------------------------------------------------
 # platform engines (the paper's search backends)
 # ---------------------------------------------------------------------------
@@ -336,5 +419,6 @@ class BranchAndBoundEngine(Engine):
 
 
 __all__ = ["Engine", "EngineError", "register_engine", "get_engine",
-           "available_engines", "GridEngine", "BisectEngine", "SweepEngine",
-           "ExplorerEngine", "SwarmEngine", "BranchAndBoundEngine"]
+           "available_engines", "GridEngine", "BisectEngine", "MeasureEngine",
+           "SweepEngine", "ExplorerEngine", "SwarmEngine",
+           "BranchAndBoundEngine"]

@@ -33,7 +33,11 @@ class Tunable(Protocol):
 
     ``measure(cfg) -> float`` is an *optional* extra method: when present,
     engines asked to run with ``use_measure=True`` price configurations by
-    executing them instead of through ``cost``.
+    executing them instead of through ``cost``, and the ``measure`` engine
+    shortlists through ``cost`` then lets wall-clock pick the winner.
+    A tunable that implements both must report ``cost`` and ``measure``
+    in the same unit (the in-tree tunables use microseconds), so modeled
+    and measured times stay comparable in results and cache entries.
     """
 
     name: str

@@ -1,0 +1,126 @@
+"""Attention-path tests: the Pallas flash runtime path
+(``use_flash=True``) against the pure-JAX math, chunked-prefill
+position handling, and per-slot decode positions."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import attention as A
+from repro.models.common import init_params
+
+
+def _setup(S=128, B=2, seed=0, **cfg_overrides):
+    cfg = get_config("smollm-135m").reduced()
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    p = init_params(A.attn_specs(cfg), jax.random.PRNGKey(seed))
+    p = jax.tree.map(lambda a: a.astype(jnp.float32), p)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((B, S, cfg.d_model)) * 0.3,
+                    jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    return cfg, p, x, pos
+
+
+# ---------------------------------------------------------------------------
+# use_flash runtime path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("window", [None, 32])
+def test_attention_use_flash_matches_pure_jax(window):
+    """The @autotune'd Pallas flash kernel (interpret mode on CPU) must
+    agree with the pure-JAX math at fp32 tolerance."""
+
+    cfg, p, x, pos = _setup(S=128)
+    ref = A.attention(p, cfg, x, pos, causal=True, window=window)
+    got = A.attention(p, cfg, x, pos, causal=True, window=window,
+                      use_flash=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-4)
+
+
+def test_attention_use_flash_non_causal():
+    cfg, p, x, pos = _setup(S=128)
+    ref = A.attention(p, cfg, x, pos, causal=False)
+    got = A.attention(p, cfg, x, pos, causal=False, use_flash=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-4)
+
+
+def test_attention_use_flash_falls_back_on_untileable_seq():
+    """S not divisible by the 128-lane block cannot go through the
+    kernel; use_flash must silently take the pure-JAX path."""
+
+    cfg, p, x, pos = _setup(S=100)
+    assert not A._flash_supported(100)
+    ref = A.attention(p, cfg, x, pos)
+    got = A.attention(p, cfg, x, pos, use_flash=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# chunked-prefill positions
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("offset", [0, 7])
+@pytest.mark.parametrize("window,chunk,S", [(None, 16, 64), (24, 16, 60),
+                                            (None, 32, 50)])
+def test_qchunked_honors_caller_positions(offset, window, chunk, S):
+    """The q-chunked path must mask with the caller's ``positions``
+    (offset prefill), exactly like the un-chunked path — it used to
+    assume 0-based contiguous query indices."""
+
+    B, H, hd = 1, 2, 16
+    rng = np.random.default_rng(offset * 31 + S)
+    q, k, v = (jnp.asarray(rng.standard_normal((B, H, S, hd)), jnp.float32)
+               for _ in range(3))
+    positions = (jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+                 + offset)
+
+    qi = positions[:, None, :, None]
+    ki = positions[:, None, None, :]
+    mask = ki <= qi
+    if window is not None:
+        mask &= ki >= qi - window + 1
+    ref = A._sdpa(q, k, v, mask, hd ** -0.5)
+    got = A._sdpa_qchunked(q, k, v, positions, hd ** -0.5, causal=True,
+                           window=window, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# per-slot decode positions
+# ---------------------------------------------------------------------------
+
+def test_decode_attention_per_slot_positions_match_scalar():
+    """A (B,) vector of per-slot cache lengths must decode each row
+    exactly as a solo scalar-position call would."""
+
+    cfg, p, _, _ = _setup()
+    B, C = 3, 16
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((B, 1, cfg.d_model)) * 0.3,
+                    jnp.float32)
+    cache = {
+        "k": jnp.asarray(rng.standard_normal(
+            (B, cfg.n_kv_heads, C, cfg.hd)) * 0.3, jnp.float32),
+        "v": jnp.asarray(rng.standard_normal(
+            (B, cfg.n_kv_heads, C, cfg.hd)) * 0.3, jnp.float32),
+    }
+    cur = [5, 0, 2]
+    out_vec, cache_vec = A.decode_attention(p, cfg, x, cache,
+                                            jnp.asarray(cur, jnp.int32))
+    for b, c in enumerate(cur):
+        sliced = {k: v[b:b + 1] for k, v in cache.items()}
+        out_b, cache_b = A.decode_attention(p, cfg, x[b:b + 1], sliced,
+                                            jnp.int32(c))
+        np.testing.assert_allclose(np.asarray(out_vec[b]),
+                                   np.asarray(out_b[0]),
+                                   rtol=1e-5, atol=1e-5)
+        for key in ("k", "v"):
+            np.testing.assert_array_equal(np.asarray(cache_vec[key][b]),
+                                          np.asarray(cache_b[key][0]))

@@ -8,7 +8,7 @@ import pytest
 
 from repro.configs import get_config
 from repro.models import build_model
-from repro.runtime.serve import Server
+from repro.runtime.serve import DecodeBatchTunable, Server, choose_batch
 
 
 def make(name="smollm-135m", batch=3, context=32):
@@ -56,12 +56,89 @@ def test_server_greedy_matches_offline_forward():
     assert req.out == toks[len(prompt):]
 
 
+def test_server_staggered_admissions_match_single_request_decoding():
+    """Mixed-progress slots: a request admitted while another is already
+    several tokens in must decode exactly as it would alone.  Before
+    per-slot positions, ``tick`` collapsed all active slots onto
+    ``slot_pos.max()``, giving lagging slots the wrong RoPE rotation and
+    ring-cache slot."""
+
+    cfg, api, params, server = make(batch=2, context=32)
+    rng = np.random.default_rng(11)
+    prompt_a = rng.integers(0, cfg.vocab, 6).tolist()
+    prompt_b = rng.integers(0, cfg.vocab, 3).tolist()
+
+    req_a = server.submit(prompt_a, max_new=4)
+    for _ in range(3):
+        server.tick()                    # A alone: slot_pos[A] runs ahead
+    req_b = server.submit(prompt_b, max_new=4)   # admitted at pos 0
+    server.run_until_drained()
+    assert req_a.done and req_b.done
+
+    # each request must match a solo single-slot server (no interference)
+    for prompt, req in ((prompt_a, req_a), (prompt_b, req_b)):
+        solo = Server(api, params, batch=1, context=32)
+        ref = solo.submit(prompt, max_new=4)
+        solo.run_until_drained()
+        assert req.out == ref.out
+
+
+def test_server_staggered_admissions_sliding_window():
+    """Same staggering through a ring-buffer (sliding-window) cache:
+    per-slot ring slots and validity masks must not cross-talk."""
+
+    cfg = get_config("smollm-135m").reduced().replace(
+        logits_dtype="float32", window=8)
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    server = Server(api, params, batch=2, context=24)
+    rng = np.random.default_rng(5)
+    prompt_a = rng.integers(0, cfg.vocab, 10).tolist()  # > window
+    prompt_b = rng.integers(0, cfg.vocab, 4).tolist()
+
+    req_a = server.submit(prompt_a, max_new=3)
+    for _ in range(5):
+        server.tick()
+    req_b = server.submit(prompt_b, max_new=3)
+    server.run_until_drained()
+
+    for prompt, req in ((prompt_a, req_a), (prompt_b, req_b)):
+        solo = Server(api, params, batch=1, context=24)
+        ref = solo.submit(prompt, max_new=3)
+        solo.run_until_drained()
+        assert req.out == ref.out
+
+
 def test_server_respects_context_limit():
     cfg, api, params, server = make(batch=1, context=16)
     req = server.submit([1] * 4, max_new=100)   # longer than context
     server.run_until_drained()
     assert req.done
     assert len(req.out) < 16
+
+
+def test_choose_batch_measure_engine_times_real_drains():
+    """``engine="measure"`` refines the modeled slot count against real
+    ``Server`` drains: the winner's measured drain time is <= the pure
+    cost-model pick's measured drain time (both are in the shortlist)."""
+
+    cfg, api, params, _ = make()
+    batch, res = choose_batch(api, context=16, requests=3, max_new=2,
+                              params=params, engine="measure", cache=None,
+                              budget=2, repeats=1)
+    assert res.stats["provenance"] == "measured"
+    assert res.t_min > 0.0
+    assert batch == res.best_config["batch"]
+    assert res.stats["measured_pick"]["measured"] <= \
+        res.stats["modeled_pick"]["measured"]
+
+
+def test_decode_batch_tunable_measure_requires_model():
+    tb = DecodeBatchTunable(param_bytes=1 << 20, layers=2, d_model=64,
+                            context=16, requests=2, mean_new=2)
+    import pytest
+    with pytest.raises(RuntimeError, match="api=/params="):
+        tb.measure({"batch": 1})
 
 
 def test_encdec_serving_with_encoder_prefill():

@@ -44,7 +44,8 @@ class CountingTunable:
 
 def test_registry_has_all_engines():
     names = available_engines()
-    for n in ("sweep", "explorer", "swarm", "bnb", "grid", "bisect"):
+    for n in ("sweep", "explorer", "swarm", "bnb", "grid", "bisect",
+              "measure"):
         assert n in names
     eng = get_engine("sweep")
     assert isinstance(eng, Engine) and eng.name == "sweep"
@@ -141,11 +142,28 @@ def test_cache_roundtrip_and_hit_skips_engine(tmp_path):
     assert r2.best_config == r1.best_config and r2.t_min == r1.t_min
     assert cache.stats["hits"] == 1 and cache.stats["misses"] == 1
 
-    # persistent across instances: a fresh cache object reloads the file
+    # persistent across instances: after a flush, a fresh cache object
+    # reloads the file (puts are deferred — save() writes them out)
+    cache.save()
     fresh = TuningCache(tmp_path / "cache.json")
     t2 = CountingTunable()
     r3 = tune(t2, engine="grid", cache=fresh)
     assert r3.stats["cache"] == "hit" and t2.cost_calls == 0
+
+
+def test_cache_put_defers_write_until_save(tmp_path):
+    """``put`` is O(1): it marks the store dirty and the JSON file is
+    only (re)written on explicit ``save()`` (and at interpreter exit) —
+    a sweep storing N entries costs one serialization, not N."""
+
+    path = tmp_path / "cache.json"
+    cache = TuningCache(path)
+    for ident in ("a", "b", "c"):
+        tune(CountingTunable(ident), engine="grid", cache=cache)
+    assert cache.dirty and not path.exists()
+    cache.save()
+    assert not cache.dirty and path.exists()
+    assert len(TuningCache(path)) == 3
 
 
 def test_cache_invalidates_on_shape_change(tmp_path):
@@ -275,6 +293,112 @@ def test_cache_force_reruns(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# measure engine (cost-model shortlist -> wall-clock verdict)
+# ---------------------------------------------------------------------------
+
+
+class MeasuredTunable(CountingTunable):
+    """cost says block=4 is best (10//block); measure says block=2 is
+    (measured time = |block - 2|) — the model and the hardware disagree,
+    which is exactly what the measure engine exists to resolve."""
+
+    def __init__(self, ident="a"):
+        super().__init__(ident)
+        self.measure_calls = 0
+
+    def measure(self, cfg):
+        self.measure_calls += 1
+        return float(abs(cfg["block"] - 2))
+
+
+def test_measure_engine_returns_wallclock_winner(tmp_path):
+    cache = TuningCache(tmp_path / "cache.json")
+    t = MeasuredTunable()
+    res = tune(t, engine="measure", cache=cache, repeats=1)
+    # cost ranks 4 < 2 < 1; full shortlist (top_k=4 >= 3) measured;
+    # wall-clock picks block=2 over the model's block=4
+    assert res.best_config == {"block": 2}
+    assert res.t_min == 0.0
+    assert res.stats["provenance"] == "measured"
+    assert t.measure_calls == 3
+
+    # both rankings recorded: the modeled pick and its measured time
+    assert res.stats["modeled_pick"]["config"] == {"block": 4}
+    assert res.stats["measured_pick"]["config"] == {"block": 2}
+    assert res.stats["measured_pick"]["measured"] <= \
+        res.stats["modeled_pick"]["measured"]
+
+    # ... and they survive the cache round-trip
+    r2 = tune(t, engine="measure", cache=cache, repeats=1)
+    assert r2.stats["cache"] == "hit"
+    assert r2.stats["provenance"] == "measured"
+    assert r2.stats["modeled_pick"]["measured"] == \
+        res.stats["modeled_pick"]["measured"]
+    assert t.measure_calls == 3                 # hit: no re-measurement
+
+
+def test_measure_engine_budget_bounds_shortlist():
+    t = MeasuredTunable()
+    res = tune(t, engine="measure", cache=None, budget=1, repeats=1)
+    # shortlist of 1 = the pure cost-model pick, measured
+    assert t.measure_calls == 1
+    assert res.best_config == {"block": 4}
+    assert res.stats["shortlist"] == 1 and res.stats["evaluated"] == 3
+
+
+def test_measure_engine_median_of_repeats():
+    class Noisy(MeasuredTunable):
+        def measure(self, cfg):
+            self.measure_calls += 1
+            # one wild outlier per config; median must shrug it off
+            if self.measure_calls % 3 == 1:
+                return 1e9
+            return float(abs(cfg["block"] - 2))
+
+    t = Noisy()
+    res = tune(t, engine="measure", cache=None, repeats=3)
+    assert t.measure_calls == 9
+    assert res.best_config == {"block": 2} and res.t_min == 0.0
+
+
+def test_measure_engine_requires_measure_method():
+    with pytest.raises(EngineError, match="measure"):
+        tune(CountingTunable(), engine="measure", cache=None)
+
+
+def test_measure_engine_kernel_end_to_end(tmp_path):
+    """The full vertical slice on CPU interpret mode: a real Pallas
+    kernel tunable measured for real, winner cached with provenance."""
+
+    cache = TuningCache(tmp_path / "cache.json")
+    t = mm.MatmulTunable(128, 128, 128)         # one-point lattice: fast
+    res = tune(t, engine="measure", cache=cache, repeats=1)
+    assert res.stats["provenance"] == "measured"
+    assert res.t_min > 0.0                      # a real wall-clock time
+    assert res.best_config == {"bm": 128, "bn": 128, "bk": 128}
+    entry = list(cache._entries.values())[0]
+    assert entry["provenance"] == "measured"
+    assert entry["stats"]["modeled_pick"]["modeled"] > 0.0
+    assert entry["stats"]["measured_pick"]["measured"] == res.t_min
+
+
+def test_force_overwrites_hit_with_fresh_provenance(tmp_path):
+    cache = TuningCache(tmp_path / "cache.json")
+    t = MeasuredTunable()
+    tune(t, engine="measure", cache=cache, repeats=1)
+    key, _ = cache_key(t, "measure", params={"repeats": 1})
+    first = dict(cache._entries[key])
+    assert first["provenance"] == "measured"
+
+    res = tune(t, engine="measure", cache=cache, repeats=1, force=True)
+    assert res.stats["cache"] == "miss"         # engine re-ran
+    assert t.measure_calls == 6
+    second = cache._entries[key]
+    assert second["provenance"] == "measured"
+    assert second["created"] >= first["created"]
+
+
+# ---------------------------------------------------------------------------
 # @autotune
 # ---------------------------------------------------------------------------
 
@@ -301,6 +425,39 @@ def test_autotune_decorator_tunes_then_hits_cache(tmp_path):
     assert probe.cost_calls == n
     assert cache.stats["hits"] == 1
     assert f.tuned_params == ("block",)
+
+
+def test_autotune_memo_survives_unhashable_tunable():
+    """An unhashable tunable (dict-holding dataclass) must skip the
+    in-process memo cleanly — the lookup's TypeError used to leave
+    ``memo_key`` set, so the later store crashed uncaught."""
+
+    from dataclasses import dataclass as _dc
+
+    @_dc                                     # eq without hash: unhashable
+    class DictTunable:
+        payload: dict
+        name = "test.dict-tunable"
+
+        def space(self):
+            return SearchSpace(params=[Param("block", (1, 2, 4))])
+
+        def cost(self, cfg):
+            return cfg["block"]
+
+        def fingerprint(self):
+            return {"tunable": self.name, "payload": dict(self.payload)}
+
+    with pytest.raises(TypeError):
+        hash(DictTunable({"n": 1}))          # precondition of the test
+
+    @autotune(lambda x, **kw: DictTunable({"n": x}), params=("block",),
+              cache=None)
+    def f(x, *, block=None):
+        return x * block
+
+    assert f(5) == 5                         # tuned: best block == 1
+    assert f(5) == 5                         # memo-less second call
 
 
 def test_kernel_autotune_cache_hit_fast_path():
