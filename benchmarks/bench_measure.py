@@ -5,16 +5,16 @@ benchmark closes the loop the way the related work does (Falch & Elster;
 "Tuning the Tuner"): the cost model shortlists the lattice off-hardware,
 the hardware ranks the shortlist by wall-clock.  The table shows both
 times per candidate and whether the model's pick survived measurement —
-interpret mode on CPU, compiled kernels on TPU, same code path.
+interpret mode on CPU, compiled kernels on TPU, same code path.  The
+cases run as one :class:`~repro.tune.TuningPlan` (caching disabled so
+every run really measures).
 """
 
 from __future__ import annotations
 
-import time
-
 from repro.kernels.matmul_tuned.ops import MatmulTunable
 from repro.kernels.tuned_reduction.ops import ReductionTunable
-from repro.tune import tune
+from repro.tune import TuningPlan
 
 SMOKE_CASES = [
     ("matmul_256", MatmulTunable(256, 256, 256)),
@@ -29,11 +29,18 @@ FULL_CASES = SMOKE_CASES + [
 
 def run(csv: list[str], cases=None, top_k: int = 2, repeats: int = 1) -> None:
     print("\n== measure engine: modeled shortlist -> wall-clock verdict ==")
+    plan = TuningPlan(name="bench-measure")
     for label, tb in (cases or SMOKE_CASES):
-        t0 = time.perf_counter()
-        res = tune(tb, engine="measure", cache=None, budget=top_k,
-                   repeats=repeats)
-        dt = time.perf_counter() - t0
+        plan.add(tb, engine="measure", label=label, budget=top_k,
+                 repeats=repeats)
+    report = plan.run(cache=None)
+    for job in report.results:
+        label = job.label
+        if job.status == "failed":
+            print(f"\n{label}: FAILED — {job.error}")
+            csv.append(f"measure_{label},0,failed")
+            continue
+        res, dt = job.result, job.elapsed_s
 
         modeled = res.stats["modeled_pick"]
         measured = res.stats["measured_pick"]

@@ -14,7 +14,7 @@ from pathlib import Path
 
 from repro.core.tpu_machine import (TPUConfig, step_time, tune_distributed,
                                     workload_from_arch)
-from repro.tune import TuningCache, tune
+from repro.tune import TuningCache, TuningPlan
 
 CELLS = [("minitron-8b", "train_4k", 1), ("qwen3-32b", "train_4k", 1),
          ("mixtral-8x22b", "train_4k", 1),
@@ -49,25 +49,43 @@ def run(csv: list[str], cells=None) -> None:
 
 
 def run_cache(csv: list[str]) -> None:
-    """Persistent TuningCache amortization: the same workload tuned
-    twice — engine run on the miss, answer served on the hit."""
+    """Persistent TuningCache amortization, fleet-rollout style: a
+    :class:`TuningPlan` warm-up (engine runs), the same plan again
+    (100% cache hits), and an export→merge artifact round-trip into a
+    fresh cache that also serves pure hits."""
 
-    print("\n== repro.tune TuningCache (tune once, serve forever) ==")
+    print("\n== repro.tune TuningPlan warm-up (tune once, serve a fleet) ==")
     w = workload_from_arch("minitron-8b", "train_4k")
     with tempfile.TemporaryDirectory() as d:
         cache = TuningCache(Path(d) / "tune_cache.json")
+        plan = TuningPlan(name="bench-warmup")
+        plan.add(w.tunable(chips_per_pod=256), engine="grid",
+                 label="minitron-8b/train_4k")
         t0 = time.perf_counter()
-        r1 = tune(w.tunable(chips_per_pod=256), engine="grid", cache=cache)
+        r1 = plan.run(cache=cache)
         miss = time.perf_counter() - t0
         t0 = time.perf_counter()
-        r2 = tune(w.tunable(chips_per_pod=256), engine="grid", cache=cache)
+        r2 = plan.run(cache=cache)
         hit = time.perf_counter() - t0
-        assert r2.best_config == r1.best_config
-        print(f"miss: {miss*1e3:8.2f} ms ({r1.oracle_calls} configs "
-              f"evaluated)   hit: {hit*1e3:8.3f} ms "
-              f"({miss/max(hit, 1e-9):,.0f}x)  stats={cache.stats}")
+        assert r2.counts["hits"] == len(plan)          # second run: all hits
+        j1, j2 = r1.results[0], r2.results[0]
+        assert j2.best_config == j1.best_config
+        print(f"warm-up: {miss*1e3:8.2f} ms ({j1.result.oracle_calls} "
+              f"configs evaluated)   re-run: {hit*1e3:8.3f} ms "
+              f"({miss/max(hit, 1e-9):,.0f}x, {r2.counts['hits']}/"
+              f"{len(plan)} hits)  stats={cache.stats}")
+        # rollout: ship the warmed cache as an artifact; a fresh node
+        # merges it and serves the same plan without one engine run
+        art = Path(d) / "artifact.json"
+        cache.export_artifact(art)
+        fresh = TuningCache(Path(d) / "fresh_node.json")
+        fresh.merge_artifact(art)
+        r3 = plan.run(cache=fresh)
+        assert r3.counts["hits"] == len(plan)
+        print(f"artifact round-trip: fresh node {r3.counts['hits']}/"
+              f"{len(plan)} hits (0 engine runs)")
         csv.append(f"tune_cache_miss,{miss*1e6:.1f},"
-                   f"configs={r1.oracle_calls}")
+                   f"configs={j1.result.oracle_calls}")
         csv.append(f"tune_cache_hit,{hit*1e6:.2f},"
                    f"speedup={miss/max(hit, 1e-9):.0f}x")
 

@@ -4,13 +4,14 @@ through the unified ``repro.tune`` API.
 
     PYTHONPATH=src python examples/autotune_minimum.py
 
-1. model-check the (WG, TS) lattice for a 2^20-element reduction on a
-   GPU-like abstract platform (15 units × 128 PEs),
-2. tune the TPU Pallas kernel's block_rows with the same machinery
-   (grid engine over the HBM-streaming cost model),
-3. execute the kernel with block_rows *omitted* — the ``@autotune``
-   decorator resolves it from the tuning cache — and check the result
-   against the pure-jnp oracle.
+1. build a :class:`~repro.tune.TuningPlan` with two jobs — model-check
+   the (WG, TS) lattice for a 2^20-element reduction on a GPU-like
+   abstract platform (15 units × 128 PEs), and tune the TPU Pallas
+   kernel's block_rows with the same machinery (grid engine over the
+   HBM-streaming cost model) — and run it through the persistent cache,
+2. execute the kernel with block_rows *omitted* — the ``@autotune``
+   decorator resolves it from the warmed tuning cache — and check the
+   result against the pure-jnp oracle.
 """
 
 import time
@@ -22,17 +23,25 @@ import numpy as np
 from repro.core import PlatformSpec
 from repro.kernels.tuned_reduction.ops import ReductionTunable, reduce_1d, \
     reduce_ref
-from repro.tune import PlatformTunable, tune
+from repro.tune import PlatformTunable, TuningPlan, tune
 
 SIZE = 1 << 20
 
-# 1. paper-style tuning of the abstract OpenCL kernel
-spec = PlatformSpec(size=SIZE, NP=128, GMT=16, L=8, kind="minimum")
+# 1. one declarative plan: the paper-style abstract-platform job and the
+# Pallas-kernel job, executed through the persistent cache (skip-on-hit)
+plan = TuningPlan(name="minimum-warmup")
+plan.add(PlatformTunable(PlatformSpec(size=SIZE, NP=128, GMT=16, L=8,
+                                      kind="minimum")),
+         engine="sweep", label="abstract-platform")
+plan.add(ReductionTunable(SIZE), engine="grid", label="pallas-reduction")
+
 t0 = time.perf_counter()
-res = tune(PlatformTunable(spec), engine="sweep", cache=None)
+report = plan.run(progress=print)
+assert report.ok, report.summary()
+res, kres = (j.result for j in report.results)
 print(f"abstract platform: optimal WG={res.best_config['WG']} "
       f"TS={res.best_config['TS']} model_time={res.t_min} "
-      f"({(time.perf_counter()-t0)*1e3:.1f} ms over the whole lattice)")
+      f"({(time.perf_counter()-t0)*1e3:.1f} ms for the whole plan)")
 
 # swarm agrees (randomized bounded search, Fig. 5)
 small = PlatformTunable(PlatformSpec(size=64, NP=4, GMT=16, kind="minimum"))
@@ -41,14 +50,12 @@ r_ex = tune(small, engine="sweep", cache=None)
 print(f"swarm sanity (size=64): swarm t={r_sw.t_min} vs exhaustive "
       f"t={r_ex.t_min}")
 
-# 2. tune the Pallas kernel's block size with the same method
-kres = tune(ReductionTunable(SIZE), engine="grid")
 print(f"pallas kernel: block_rows={kres.best_config['block_rows']} "
       f"modeled {kres.t_min:.1f} us  ({kres.oracle_calls or 'cached'} "
       f"configs, cache {kres.stats.get('cache')})")
 
-# 3. run the kernel with block_rows omitted: @autotune resolves it from
-# the cache (the tuning above already warmed it) and validates
+# 2. run the kernel with block_rows omitted: @autotune resolves it from
+# the cache (the plan above already warmed it) and validates
 x = jnp.asarray(np.random.default_rng(0).integers(-2**31, 2**31 - 1, SIZE,
                 dtype=np.int64).astype(np.int32))
 got = reduce_1d(x, op="min")

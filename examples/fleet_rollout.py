@@ -1,0 +1,60 @@
+"""Fleet rollout end-to-end: warm a tuning cache from a declarative
+plan, export it as a portable artifact, merge it into a fresh "fleet
+node" cache, and show an ``@autotune`` kernel call resolving its block
+sizes with zero engine runs — the paper's amortization argument at
+fleet scale.
+
+    PYTHONPATH=src python examples/fleet_rollout.py
+
+Equivalent CLI (what a real rollout pipeline runs)::
+
+    python -m repro.tune --cache warm.json warmup examples/plans/fleet_warmup.json
+    python -m repro.tune --cache warm.json export artifact.json
+    python -m repro.tune --cache node.json merge artifact.json
+    python -m repro.tune --cache node.json ls
+"""
+
+import tempfile
+from pathlib import Path
+
+import jax.numpy as jnp
+
+from repro.tune import TuningCache, TuningPlan, set_default_cache
+
+PLAN = Path(__file__).parent / "plans" / "fleet_warmup.json"
+
+with tempfile.TemporaryDirectory() as d:
+    d = Path(d)
+
+    # 1. warm-up node: run the plan (all four Pallas kernel tunables,
+    # the serving-slot tunable, and a meta "tune the tuner" job)
+    warm = TuningCache(d / "warm.json")
+    plan = TuningPlan.from_spec(PLAN)
+    report = plan.run(cache=warm, progress=print)
+    assert report.ok, report.summary()
+
+    # 2. ship: export a schema-versioned artifact, merge into a fresh
+    # node's cache (prefer_measured keeps wall-clock picks on conflict)
+    bundle = warm.export_artifact(d / "artifact.json")
+    node = TuningCache(d / "node.json")
+    merged = node.merge_artifact(d / "artifact.json")
+    node.save()
+    print(f"shipped {bundle['entry_count']} entries; node merged "
+          f"{merged['added']} added / {merged['kept']} kept")
+
+    # 3. fleet node: @autotune resolves purely from the merged cache
+    set_default_cache(node)
+    from repro.kernels.matmul_tuned.ops import matmul_tuned
+    a = jnp.ones((128, 128), jnp.float32)
+    decision = matmul_tuned.tune(a, a)
+    assert decision.stats["cache"] == "hit", decision.stats
+    out = matmul_tuned(a, a)
+    assert node.misses == 0, node.stats
+    print(f"fleet node: matmul_tuned resolved "
+          f"{decision.best_config} from cache with 0 engine runs "
+          f"(result[0,0]={float(out[0, 0])})")
+
+    # the same plan re-run on the node is 100% hits
+    again = plan.run(cache=node)
+    assert again.counts["hits"] == len(plan), again.summary()
+    print(f"re-warmup on node: {again.summary()}")

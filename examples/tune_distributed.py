@@ -1,18 +1,36 @@
 """Tune the 512-chip distributed configuration off-hardware (the paper's
-headline benefit at fleet scale).
+headline benefit at fleet scale) — the three cells expressed as one
+declarative :class:`~repro.tune.TuningPlan` instead of a hand-rolled
+loop, with skip-on-hit caching across re-runs.
 
     PYTHONPATH=src python examples/tune_distributed.py
 """
 
-from repro.core.tpu_machine import (TPUConfig, step_time, tune_distributed,
+from repro.core.tpu_machine import (DistributedTunable, TPUConfig, step_time,
                                     workload_from_arch)
+from repro.tune import TuningPlan
 
-for arch, pods in [("minitron-8b", 1), ("qwen3-32b", 1),
-                   ("llama4-maverick-400b-a17b", 2)]:
-    w = workload_from_arch(arch, "train_4k")
-    best, t, ranked = tune_distributed(w, chips_per_pod=256, pods=pods)
-    base = step_time(w, TPUConfig(dp=16, tp=16, pods=pods))
-    print(f"{arch} ({pods} pod(s), {t['chips']} chips):")
+CELLS = [("minitron-8b", 1), ("qwen3-32b", 1),
+         ("llama4-maverick-400b-a17b", 2)]
+
+plan = TuningPlan(name="distributed-train")
+tunables = []
+for arch, pods in CELLS:
+    tb = DistributedTunable(workload_from_arch(arch, "train_4k"),
+                            chips_per_pod=256, pods=pods)
+    tunables.append((arch, pods, tb))
+    plan.add(tb, engine="grid", label=f"{arch}/pods={pods}")
+
+report = plan.run(progress=None)
+
+for (arch, pods, tb), job in zip(tunables, report.results):
+    if job.status == "failed":
+        print(f"{arch} ({pods} pod(s)): FAILED — {job.error}")
+        continue
+    best = tb.to_config(job.best_config)
+    t = tb.decomposition(best)
+    base = step_time(tb.workload, TPUConfig(dp=16, tp=16, pods=pods))
+    print(f"{arch} ({pods} pod(s), {t['chips']} chips, cache {job.status}):")
     print(f"  tuned : tp={best.tp} dp={best.dp} microbatches="
           f"{best.microbatches} remat={best.remat} fsdp={best.fsdp} "
           f"compress={best.compress_pod_grads}")
@@ -21,3 +39,5 @@ for arch, pods in [("minitron-8b", 1), ("qwen3-32b", 1),
           f"/ exposed-coll {t['exposed_collective']*1e3:.1f}) vs baseline "
           f"{base['total']*1e3:.1f} ms -> "
           f"{base['total']/t['total']:.2f}x")
+
+print(report.summary())

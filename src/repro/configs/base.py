@@ -57,6 +57,9 @@ class ArchConfig:
     encoder_layers: int = 0              # audio enc-dec
     enc_seq: int = 1500                  # audio stub frame count
     logits_dtype: str = "float32"
+    use_flash: bool = False              # route full-seq self-attention
+    #   through the @autotune'd Pallas flash kernel (shapes the kernel
+    #   cannot tile fall back to the pure-JAX math per call site)
     remat: str = "full"                  # none | dots | full (tunable)
     ssd_dtype: str = "float32"           # SSD intra-chunk compute dtype (tunable)
     loss_seq_chunk: int = 0              # 0 = whole-sequence CE; else chunked

@@ -18,6 +18,8 @@ qwen3_32b = ArchConfig(
 qwen15_4b = ArchConfig(
     name="qwen1.5-4b", family="dense", n_layers=40, d_model=2560,
     n_heads=20, n_kv_heads=20, d_ff=6912, vocab=151_936, qkv_bias=True,
+    use_flash=True,   # flash-path default: full-size shapes tile by 128;
+                      # untileable smoke shapes fall back per call site
     source="QKV bias [hf:Qwen/Qwen1.5-0.5B; hf]")
 
 smollm_135m = ArchConfig(

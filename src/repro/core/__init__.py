@@ -9,10 +9,11 @@ Public API:
 * :func:`~repro.core.bisect_search.find_minimal_time` — Fig. 1,
 * :func:`~repro.core.swarm.swarm_search` — Fig. 5,
 * :func:`~repro.core.sweep.sweep_times` — beyond-paper vectorized engine,
-* :class:`~repro.core.autotuner.AutoTuner` — the four-step method, packaged.
+* :class:`~repro.core.autotuner.TuneResult` — the shared result type
+  (the four-step method itself is packaged as :func:`repro.tune.tune`).
 """
 
-from .autotuner import AutoTuner, FunctionTuner, TuneResult
+from .autotuner import TuneResult
 from .bisect_search import find_minimal_time
 from .counterexample import Counterexample
 from .explorer import ExploreResult, explore, replay
@@ -24,7 +25,7 @@ from .sweep import cex_oracle, sweep_times
 from .wave_model import WaveParams, model_time, model_time_jnp
 
 __all__ = [
-    "AutoTuner", "FunctionTuner", "TuneResult", "find_minimal_time",
+    "TuneResult", "find_minimal_time",
     "Counterexample", "ExploreResult", "explore", "replay", "PlatformSpec",
     "build_model", "NonTermination", "OverTime", "trace_satisfies", "Param",
     "SearchSpace", "powers_of_two", "wg_ts_space", "swarm_search",

@@ -1,29 +1,24 @@
-"""DEPRECATED legacy tuning entry points (thin shims over ``repro.tune``).
+"""``TuneResult`` — the result dataclass every tuning layer shares.
 
-``AutoTuner`` and ``FunctionTuner`` were the seed's two front doors; all
-tuning now goes through the unified :mod:`repro.tune` API —
+The seed's two front doors (``AutoTuner``/``FunctionTuner``) lived here;
+both were replaced by the unified :mod:`repro.tune` API —
 
     from repro.tune import tune, PlatformTunable, FunctionTunable
-    tune(PlatformTunable(spec), engine="sweep")     # was AutoTuner(spec).tune("sweep")
-    tune(FunctionTunable(cost_fn, space), "grid")   # was FunctionTuner(cost_fn, space).tune()
+    tune(PlatformTunable(spec), engine="sweep")
+    tune(FunctionTunable(cost_fn, space), engine="grid")
 
-— which adds the engine registry and the persistent
-:class:`~repro.tune.TuningCache`.  The shims delegate verbatim (with
-caching disabled, matching the old behavior) and are kept only so
-existing callers and the parity tests keep working; new code should not
-use them.  ``TuneResult`` remains defined here as the leaf dataclass both
-layers share.
+— and the deprecated shims have since been removed (no callers remain).
+``TuneResult`` stays defined in ``core`` because it is the leaf type both
+the paper-faithful search code and the ``repro.tune`` engine/cache/plan
+layers depend on, without either importing the other.
 """
 
 from __future__ import annotations
 
-import warnings
 from dataclasses import dataclass, field
-from typing import Any, Callable
+from typing import Any
 
 from .counterexample import Counterexample
-from .search_space import SearchSpace
-from .wave_model import WaveParams
 
 
 @dataclass
@@ -38,46 +33,4 @@ class TuneResult:
     log: Any = None
 
 
-def _deprecated(old: str, new: str) -> None:
-    warnings.warn(f"{old} is deprecated; use {new}",
-                  DeprecationWarning, stacklevel=3)
-
-
-class AutoTuner:
-    """DEPRECATED: use ``repro.tune.tune(PlatformTunable(spec), ...)``."""
-
-    def __init__(self, spec, space: SearchSpace | None = None,
-                 config_vars: tuple[str, ...] = ("WG", "TS")):
-        self.spec = spec
-        self.space = space
-        self.config_vars = config_vars
-        self.wave = WaveParams(size=spec.size, NP=spec.NP, GMT=spec.GMT,
-                               L=spec.L, kind=spec.kind)
-
-    def tune(self, engine: str = "sweep", **kw) -> TuneResult:
-        _deprecated("repro.core.AutoTuner",
-                    "repro.tune.tune(repro.tune.PlatformTunable(spec), ...)")
-        from ..tune import PlatformTunable, tune
-        tunable = PlatformTunable(self.spec, space=self.space,
-                                  config_vars=self.config_vars)
-        return tune(tunable, engine=engine, cache=None, **kw)
-
-
-class FunctionTuner:
-    """DEPRECATED: use ``repro.tune.tune(FunctionTunable(cost_fn, space),
-    engine="grid")``."""
-
-    def __init__(self, cost_fn: Callable[[dict], float], space: SearchSpace):
-        self.cost_fn = cost_fn
-        self.space = space
-
-    def tune(self) -> TuneResult:
-        _deprecated("repro.core.FunctionTuner",
-                    "repro.tune.tune(repro.tune.FunctionTunable(...), "
-                    "engine='grid')")
-        from ..tune import FunctionTunable, tune
-        return tune(FunctionTunable(self.cost_fn, self.space),
-                    engine="function", cache=None)
-
-
-__all__ = ["AutoTuner", "FunctionTuner", "TuneResult"]
+__all__ = ["TuneResult"]

@@ -10,7 +10,8 @@ slow inter-pod DCI (default 25 GB/s/chip-pair share).
 step time plays the role of the paper's model ``time`` variable, and
 the search over :class:`TPUConfig` lattices runs through the same
 engines (bisection over Φ_o with the vectorized sweep as C_ex oracle —
-``repro.core.autotuner.FunctionTuner`` or ``tune_distributed`` below).
+``repro.tune.tune`` on a :class:`DistributedTunable`, or
+``tune_distributed`` below).
 
 Calibration: the analytic terms are aligned against the dry-run's
 compiled artifact for the baseline config (same quantities the roofline

@@ -15,7 +15,7 @@ import numpy as np
 
 from ..configs import get_config
 from ..models import build_model
-from ..runtime.serve import Server, choose_batch
+from ..runtime.serve import Server, decode_batch_tunable
 
 
 def main(argv=None) -> None:
@@ -44,14 +44,19 @@ def main(argv=None) -> None:
 
     batch = args.batch
     if args.tune_batch:
-        batch, res = choose_batch(api, context=args.context,
+        from ..tune import TuningPlan
+        tb = decode_batch_tunable(api, context=args.context,
                                   requests=args.requests,
-                                  max_new=args.max_new, params=params,
-                                  engine=args.tune_engine)
-        prov = res.stats.get("provenance", "modeled")
-        print(f"[tune] batch={batch} {prov} drain="
-              f"{res.t_min / 1e3:.1f} ms (engine={res.engine}, "
-              f"cache {res.stats.get('cache', 'off')})")
+                                  max_new=args.max_new, params=params)
+        plan = TuningPlan(name=f"serve.{args.arch}")
+        plan.add(tb, engine=args.tune_engine, label="decode-batch")
+        job = plan.run(progress=None).results[0]
+        if job.status == "failed":
+            raise RuntimeError(f"--tune-batch failed: {job.error}")
+        batch = int(job.best_config["batch"])
+        print(f"[tune] batch={batch} {job.provenance or 'modeled'} drain="
+              f"{job.t_min / 1e3:.1f} ms (engine={job.engine}, "
+              f"cache {job.status})")
 
     server = Server(api, params, batch=batch, context=args.context)
     rng = np.random.default_rng(args.seed)

@@ -44,6 +44,9 @@ def main(argv=None) -> None:
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--tune", action="store_true",
                     help="pick distributed config via the auto-tuner")
+    ap.add_argument("--use-flash", action="store_true",
+                    help="route full-seq self-attention through the "
+                         "@autotune'd Pallas flash kernel")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--inject-failure", type=int, default=-1,
@@ -54,6 +57,8 @@ def main(argv=None) -> None:
     cfg = get_config(args.arch)
     if args.preset == "smoke":
         cfg = cfg.reduced()
+    if args.use_flash:
+        cfg = cfg.replace(use_flash=True)
     api = build_model(cfg)
     shape = ShapeSpec("cli", args.seq, args.batch, "train")
 
@@ -62,14 +67,20 @@ def main(argv=None) -> None:
     if args.tune:
         import math
 
-        from ..tune import tune as tune_api
+        from ..tune import TuningPlan
         w = TPUWorkload(params=api.param_count(),
                         active_params=api.param_count(),
                         layers=cfg.n_layers, d_model=cfg.d_model,
                         seq=args.seq, global_batch=args.batch,
                         vocab=cfg.vocab)
-        res = tune_api(w.tunable(chips_per_pod=max(len(jax.devices()), 1)),
-                       engine="grid")
+        plan = TuningPlan(name=f"train.{args.arch}")
+        plan.add(w.tunable(chips_per_pod=max(len(jax.devices()), 1)),
+                 engine="grid", label="distributed-config")
+        report = plan.run(progress=lambda s: print(f"[tune] {s}"))
+        job = report.results[0]
+        if job.status == "failed":
+            raise RuntimeError(f"tuning failed: {job.error}")
+        res = job.result
         if not math.isfinite(res.t_min):
             raise RuntimeError("no feasible configuration fits HBM")
         best = res.best_config
@@ -79,7 +90,7 @@ def main(argv=None) -> None:
         api = build_model(cfg)
         print(f"[tune] config: microbatches={microbatches} remat={remat} "
               f"fsdp={best['fsdp']} modeled step={res.t_min*1e3:.2f} ms "
-              f"(engine={res.engine}, cache {res.stats.get('cache', 'off')})")
+              f"(engine={res.engine}, cache {job.status})")
 
     tcfg = TrainConfig(lr=args.lr, warmup=max(2, args.steps // 20),
                        total_steps=args.steps, microbatches=microbatches)

@@ -128,8 +128,14 @@ def _positions_standard(positions: jax.Array, S: int) -> bool:
 
     if isinstance(positions, jax.core.Tracer):
         return True
-    return bool(jnp.all(positions ==
-                        jnp.arange(S, dtype=positions.dtype)))
+    try:
+        return bool(jnp.all(positions ==
+                            jnp.arange(S, dtype=positions.dtype)))
+    except jax.errors.ConcretizationTypeError:
+        # a concrete array can still be swept into an enclosing trace
+        # (e.g. jax.checkpoint lifts closed-over constants); same
+        # contract as the Tracer case above
+        return True
 
 
 def attention(p: dict, cfg: ArchConfig, x: jax.Array, positions: jax.Array,

@@ -105,13 +105,13 @@ def layer_forward(p: dict, cfg: ArchConfig, kind: str, x: jax.Array,
     h = rms_norm(x, p["ln1"])
     if kind in ("dense", "moe", "encoder"):
         a = attn.attention(p["attn"], cfg, h, positions, causal=causal,
-                           window=cfg.window)
+                           window=cfg.window, use_flash=cfg.use_flash)
         x = x + a
     elif kind == "ssm":
         x = x + ssm_mod.ssm_forward(p["ssm"], cfg, h)
     elif kind == "hybrid":
         a = attn.attention(p["attn"], cfg, h, positions, causal=True,
-                           window=cfg.window)
+                           window=cfg.window, use_flash=cfg.use_flash)
         m = ssm_mod.ssm_forward(p["ssm"], cfg, h)
         x = x + p["mix"][0] * a + p["mix"][1] * m
     elif kind == "cross":

@@ -1,11 +1,13 @@
 """Runtime: train step builder, fault-tolerant supervisor, serving."""
 
 from .loop import History, LoopConfig, SimulatedFailure, run_training
-from .serve import DecodeBatchTunable, Request, Server, choose_batch
+from .serve import (DecodeBatchTunable, Request, Server, choose_batch,
+                    decode_batch_tunable)
 from .train import (TrainConfig, TrainState, abstract_train_state,
                     build_train_step, init_train_state)
 
 __all__ = ["History", "LoopConfig", "SimulatedFailure", "run_training",
            "Request", "Server", "DecodeBatchTunable", "choose_batch",
+           "decode_batch_tunable",
            "TrainConfig", "TrainState", "abstract_train_state",
            "build_train_step", "init_train_state"]

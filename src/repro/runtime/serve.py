@@ -203,7 +203,22 @@ class DecodeBatchTunable:
     def fingerprint(self) -> dict[str, Any]:
         fp = {f.name: getattr(self, f.name)
               for f in dataclasses.fields(self) if f.compare}
-        return {"tunable": self.name, **fp}
+        # "unit" keys out stale entries from before cost() switched from
+        # seconds to microseconds (same fields, 1e6-different meaning)
+        return {"tunable": self.name, "unit": "us", **fp}
+
+
+def decode_batch_tunable(api: ModelAPI, *, context: int, requests: int,
+                         max_new: int, params=None) -> DecodeBatchTunable:
+    """The server-slot tunable for this model + expected load — the one
+    place the sizing wiring lives (library ``choose_batch`` and the
+    ``launch/serve --tune-batch`` CLI both build through here)."""
+
+    return DecodeBatchTunable(param_bytes=api.param_count() * 2,
+                              layers=api.cfg.n_layers,
+                              d_model=api.cfg.d_model, context=context,
+                              requests=requests, mean_new=max_new,
+                              api=api, params=params)
 
 
 def choose_batch(api: ModelAPI, *, context: int, requests: int,
@@ -217,12 +232,11 @@ def choose_batch(api: ModelAPI, *, context: int, requests: int,
     returns the wall-clock winner."""
 
     from ..tune import tune as _tune
-    tb = DecodeBatchTunable(param_bytes=api.param_count() * 2,
-                            layers=api.cfg.n_layers, d_model=api.cfg.d_model,
-                            context=context, requests=requests,
-                            mean_new=max_new, api=api, params=params)
+    tb = decode_batch_tunable(api, context=context, requests=requests,
+                              max_new=max_new, params=params)
     res = _tune(tb, engine=engine, cache=cache, **tune_kw)
     return int(res.best_config["batch"]), res
 
 
-__all__ = ["Server", "Request", "DecodeBatchTunable", "choose_batch"]
+__all__ = ["Server", "Request", "DecodeBatchTunable",
+           "decode_batch_tunable", "choose_batch"]

@@ -13,20 +13,33 @@ extraction) packaged as one engine-pluggable front door:
 * :class:`TuningCache` — persistent tuned-config store keyed by tunable
   fingerprint + platform (backend, chip generation) + engine,
 * :func:`autotune` — decorator resolving Pallas block sizes (and other
-  call-site parameters) from the cache at call time.
+  call-site parameters) from the cache at call time,
+* :class:`TuningPlan` — declarative batches of tuning jobs for fleet
+  warm-up (skip-on-hit, per-job error isolation, summary report), with
+  :class:`MetaEngineTunable` tuning the measure engine's own
+  ``top_k``/``repeats`` through the same ``tune()`` path,
+* :func:`export_artifact` / :func:`merge_artifact` (also methods on
+  ``TuningCache``) — portable schema-versioned cache bundles keyed by
+  platform fingerprint, with measured-beats-modeled conflict policy,
+* ``python -m repro.tune`` — the warmup/export/merge/ls/prune CLI.
 
-Legacy entry points ``repro.core.AutoTuner`` / ``FunctionTuner`` remain
-as thin deprecated shims over this package.
+The legacy ``repro.core.AutoTuner`` / ``FunctionTuner`` shims have been
+removed; this package is the only front door.
 """
 
 from ..core.autotuner import TuneResult
 from .api import tune
+from .artifact import (ARTIFACT_SCHEMA, ArtifactError, export_artifact,
+                       load_artifact, merge_artifact)
 from .cache import (TuningCache, cache_key, default_cache,
                     platform_fingerprint, set_default_cache,
                     tunable_fingerprint)
 from .decorators import autotune
 from .engines import (Engine, EngineError, available_engines, get_engine,
                       register_engine)
+from .plan import (JobResult, MetaEngineTunable, PlanReport, TuningJob,
+                   TuningPlan, available_tunables, build_tunable,
+                   register_tunable)
 from .tunable import FunctionTunable, PlatformTunable, Tunable
 
 __all__ = [
@@ -35,4 +48,9 @@ __all__ = [
     "available_engines", "TuningCache", "cache_key", "default_cache",
     "set_default_cache", "platform_fingerprint", "tunable_fingerprint",
     "autotune",
+    # v2: plans, meta-tuning, artifacts
+    "TuningPlan", "TuningJob", "JobResult", "PlanReport",
+    "MetaEngineTunable", "register_tunable", "available_tunables",
+    "build_tunable", "ARTIFACT_SCHEMA", "ArtifactError", "export_artifact",
+    "load_artifact", "merge_artifact",
 ]

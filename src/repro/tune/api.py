@@ -51,7 +51,8 @@ def tune(tunable, engine: str = "auto", *, cache="default",
         :class:`TuningCache`, or ``None`` to disable caching.
     budget: engine-specific work bound (configs / states / walks).
     force: re-run the engine even on a cache hit (the result overwrites
-        the cached entry).
+        the cached entry; such a re-tune reports ``stats["cache"] ==
+        "force"``, a cold forced run plain ``"miss"``).
     engine_kw: forwarded to ``Engine.run`` (e.g. ``schedule="por"``,
         ``use_bisection=True``, ``n_walks=8``).
     """
@@ -60,12 +61,17 @@ def tune(tunable, engine: str = "auto", *, cache="default",
     store = _resolve_cache(cache)
 
     key = doc = None
+    overwrote = False
     if store is not None:
         extras = dict(engine_kw)
         if budget is not None:
             extras["budget"] = budget
         key, doc = cache_key(tunable, eng.name, params=extras or None)
-        if not force:
+        if force:
+            # a forced re-run over an existing entry is a re-tune, not a
+            # cold miss — rollout reports tag it "force" below
+            overwrote = key in store
+        else:
             hit = store.get(key)
             if hit is not None:
                 witness = None
@@ -93,7 +99,8 @@ def tune(tunable, engine: str = "auto", *, cache="default",
 
     if store is not None:
         store.put(key, res, fingerprint=doc)
-        res.stats.setdefault("cache", "miss")
+        res.stats.setdefault("cache", "force" if overwrote else "miss")
+        res.stats.setdefault("key", key)
     return res
 
 

@@ -31,8 +31,8 @@ import json
 import os
 import tempfile
 import time
-import weakref
 from pathlib import Path
+from types import MappingProxyType
 from typing import Any, Mapping
 
 from ..core.autotuner import TuneResult
@@ -97,7 +97,6 @@ class TuningCache:
         self._entries: dict[str, dict[str, Any]] = {}
         self._dirty = False
         self._load()
-        _live_caches.add(self)
 
     # -- persistence --------------------------------------------------------
 
@@ -114,6 +113,12 @@ class TuningCache:
         """True when in-memory entries have not been flushed to disk."""
 
         return self._dirty
+
+    def _mark_dirty(self) -> None:
+        # the strong registration keeps this cache alive until flushed,
+        # so deferred puts survive the object going out of scope
+        self._dirty = True
+        _dirty_caches.add(self)
 
     def save(self) -> None:
         """Flush pending entries to disk (atomic replace).  ``put`` only
@@ -135,6 +140,7 @@ class TuningCache:
                 pass
             raise
         self._dirty = False
+        _dirty_caches.discard(self)
 
     # -- lookup/store --------------------------------------------------------
 
@@ -167,13 +173,72 @@ class TuningCache:
             "provenance": result.stats.get("provenance", "modeled"),
             "fingerprint": dict(fingerprint) if fingerprint else None,
         }
-        self._dirty = True
+        self._mark_dirty()
+
+    def put_entry(self, key: str, entry: Mapping[str, Any]) -> None:
+        """Store an already-serialized entry (artifact merge path)."""
+
+        self._entries[key] = dict(entry)
+        self._mark_dirty()
 
     def clear(self) -> None:
         self._entries.clear()
         self._dirty = False
+        _dirty_caches.discard(self)
         if self.path.exists():
             self.path.unlink()
+
+    @property
+    def entries(self) -> Mapping[str, dict[str, Any]]:
+        """Read-only view of the stored entries (key -> entry doc)."""
+
+        return MappingProxyType(self._entries)
+
+    # -- fleet-rollout tooling (artifacts, pruning) -------------------------
+
+    def export_artifact(self, path, *, platform: str | None = None
+                        ) -> dict[str, Any]:
+        """Write entries as a portable schema-versioned bundle — see
+        :func:`repro.tune.artifact.export_artifact`."""
+
+        from .artifact import export_artifact
+        return export_artifact(self, path, platform=platform)
+
+    def merge_artifact(self, path, *, policy: str = "prefer_measured"
+                       ) -> dict[str, Any]:
+        """Merge a bundle into this cache (``prefer_measured`` conflict
+        policy by default) — see :func:`repro.tune.artifact.merge_artifact`.
+        In-memory until :meth:`save`."""
+
+        from .artifact import merge_artifact
+        return merge_artifact(self, path, policy=policy)
+
+    def prune(self, *, backend: str | None = None,
+              stale_days: float | None = None,
+              now: float | None = None) -> int:
+        """Drop entries tuned for ``backend`` and/or older than
+        ``stale_days``; returns the number removed.  Filters AND
+        together; at least one is required (``clear()`` wipes)."""
+
+        if backend is None and stale_days is None:
+            raise ValueError("prune needs backend= and/or stale_days= "
+                             "(use clear() to wipe the cache)")
+        now = time.time() if now is None else now
+        doomed = []
+        for key, e in self._entries.items():
+            if backend is not None:
+                pf = (e.get("fingerprint") or {}).get("platform") or {}
+                if pf.get("backend") != backend:
+                    continue
+            if stale_days is not None and \
+                    now - float(e.get("created", 0)) < stale_days * 86400:
+                continue
+            doomed.append(key)
+        for key in doomed:
+            del self._entries[key]
+        if doomed:
+            self._mark_dirty()
+        return len(doomed)
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -187,14 +252,16 @@ class TuningCache:
                 "entries": len(self._entries)}
 
 
-# every live cache, flushed (if dirty) at interpreter exit so deferred
-# puts are never lost on a normal shutdown
-_live_caches: "weakref.WeakSet[TuningCache]" = weakref.WeakSet()
+# every dirty cache, flushed at interpreter exit so deferred puts are
+# never lost on a normal shutdown.  The reference is STRONG on purpose:
+# a short-lived cache that goes out of scope before exit must survive
+# until its pending entries hit disk (save() releases it)
+_dirty_caches: "set[TuningCache]" = set()
 
 
 @atexit.register
 def _flush_dirty_caches() -> None:                     # pragma: no cover
-    for cache in list(_live_caches):
+    for cache in list(_dirty_caches):
         if cache.dirty:
             try:
                 cache.save()

@@ -2,8 +2,8 @@
 
 Every engine answers the same question — *the minimal reachable
 termination time and a configuration witnessing it* — through
-``Engine.run(tunable, budget=...) -> TuneResult``.  This replaces the old
-``AutoTuner.tune`` if/elif chain: engines register under a name with
+``Engine.run(tunable, budget=...) -> TuneResult``.  This replaces the
+seed's ``AutoTuner.tune`` if/elif chain: engines register under a name with
 :func:`register_engine` and :func:`get_engine` resolves them, so new
 search strategies plug in without touching the driver.
 
@@ -90,7 +90,7 @@ def available_engines() -> tuple[str, ...]:
 
 
 # ---------------------------------------------------------------------------
-# helpers shared with the legacy AutoTuner path
+# helpers shared by the platform engines
 # ---------------------------------------------------------------------------
 
 
@@ -152,8 +152,8 @@ def _eval_fn(tunable, use_measure: bool):
 @register_engine("grid")
 @register_engine("function")
 class GridEngine(Engine):
-    """Exhaustive scan of the lattice through the cost model — the old
-    ``FunctionTuner`` (first-wins tie-break preserved for parity)."""
+    """Exhaustive scan of the lattice through the cost model
+    (first-wins tie-break, matching the seed's FunctionTuner)."""
 
     def run(self, tunable, *, budget: int | None = None,
             keep_trace: bool = False, use_measure: bool = False

@@ -1,0 +1,404 @@
+"""Declarative batches of tuning work — the fleet front door.
+
+A single ``tune()`` call amortizes one configuration; a
+:class:`TuningPlan` amortizes a *rollout*: a declarative list of
+:class:`TuningJob`\\ s (tunable factory, engine, engine kwargs), built
+programmatically with :meth:`TuningPlan.add` or from a small dict/JSON
+spec with :meth:`TuningPlan.from_spec`, and executed by
+:meth:`TuningPlan.run` against a :class:`~repro.tune.TuningCache` —
+skip-on-hit, ``force=`` override, per-job error isolation (one bad job
+never sinks the plan), progress lines and a summary
+:class:`PlanReport`.  The warmed cache then ships as an artifact
+(:mod:`repro.tune.artifact`) and every fleet node resolves its
+``@autotune`` call sites from pure cache hits.
+
+Spec format (JSON or dict)::
+
+    {"name": "fleet-warmup",
+     "jobs": [
+       {"tunable": "kernels.matmul_tuned",
+        "params": {"M": 1024, "N": 1024, "K": 1024, "dtype_bytes": 2},
+        "engine": "grid"},
+       {"tunable": "kernels.tuned_reduction",
+        "grid": {"n": [65536, 1048576]},            # expands to 2 jobs
+        "engine": "measure", "engine_kwargs": {"repeats": 3}},
+       {"tunable": "meta.engine",                   # tune the tuner
+        "params": {"engine": "measure",
+                   "inner": {"tunable": "kernels.tuned_reduction",
+                             "params": {"n": 65536}},
+                   "space": {"top_k": [1, 2, 4], "repeats": [1, 3]}}}]}
+
+``tunable`` names resolve through a registry (:func:`register_tunable`;
+the in-tree tunables are pre-registered), ``params`` feed the factory,
+and ``grid`` expands list-valued entries into the cartesian product of
+jobs — the batch analogue of a shape sweep.
+
+:class:`MetaEngineTunable` is "tuning the tuner" (Willemsen & van
+Nieuwpoort, 2025) through the standard path: it exposes another tuning
+run's *engine kwargs* (``top_k``/``repeats``/``budget`` of the measure
+engine) as its own lattice, prices a point by actually running the inner
+``tune()`` with those kwargs, and scores result quality plus a
+search-effort penalty — so ``tune(MetaEngineTunable(...), "grid")``
+selects the search hyperparameters themselves, cacheable like any other
+tunable.
+"""
+
+from __future__ import annotations
+
+import itertools
+import json
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Callable, Mapping, Sequence
+
+from ..core.autotuner import TuneResult
+from ..core.search_space import Param, SearchSpace
+from .api import tune
+from .cache import TuningCache, default_cache, tunable_fingerprint
+
+# ---------------------------------------------------------------------------
+# tunable registry (name -> factory), for dict/JSON plan specs
+# ---------------------------------------------------------------------------
+
+_FACTORIES: dict[str, Callable[..., Any]] = {}
+
+
+def register_tunable(name: str):
+    """``@register_tunable("kernels.mykernel")`` — make a tunable factory
+    addressable from plan specs.  The factory receives the spec's
+    ``params`` as keyword arguments and returns a Tunable."""
+
+    def deco(factory: Callable[..., Any]) -> Callable[..., Any]:
+        _FACTORIES[name] = factory
+        return factory
+    return deco
+
+
+def available_tunables() -> tuple[str, ...]:
+    _ensure_builtin_factories()
+    return tuple(sorted(_FACTORIES))
+
+
+def build_tunable(name: str, params: Mapping[str, Any] | None = None):
+    """Resolve ``name`` in the registry and build the tunable."""
+
+    _ensure_builtin_factories()
+    try:
+        factory = _FACTORIES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown tunable {name!r}; registered: "
+            f"{', '.join(sorted(_FACTORIES))}") from None
+    return factory(**dict(params or {}))
+
+
+_builtins_loaded = False
+
+
+def _ensure_builtin_factories() -> None:
+    # deferred: the kernel modules import repro.tune for @autotune, so
+    # registering them at plan-import time would be circular
+    global _builtins_loaded
+    if _builtins_loaded:
+        return
+
+    from ..kernels.flash_attention.ops import FlashAttentionTunable
+    from ..kernels.matmul_tuned.ops import MatmulTunable
+    from ..kernels.sweep_eval.ops import SweepEvalTunable
+    from ..kernels.tuned_reduction.ops import ReductionTunable
+    from ..runtime.serve import DecodeBatchTunable
+    _FACTORIES.setdefault("kernels.matmul_tuned", MatmulTunable)
+    _FACTORIES.setdefault("kernels.flash_attention", FlashAttentionTunable)
+    _FACTORIES.setdefault("kernels.tuned_reduction", ReductionTunable)
+    _FACTORIES.setdefault("kernels.sweep_eval", SweepEvalTunable)
+    _FACTORIES.setdefault("serve.decode_batch", DecodeBatchTunable)
+    _FACTORIES.setdefault("platform", _platform_factory)
+    _FACTORIES.setdefault("tpu.distributed", _tpu_distributed_factory)
+    _FACTORIES.setdefault("meta.engine", _meta_engine_factory)
+    # only after every import succeeded — a transient ImportError above
+    # must not poison the registry for the rest of the process
+    _builtins_loaded = True
+
+
+def _platform_factory(**spec_kw):
+    from ..core.platform import PlatformSpec
+    from .tunable import PlatformTunable
+    return PlatformTunable(PlatformSpec(**spec_kw))
+
+
+def _tpu_distributed_factory(*, arch: str | None = None,
+                             shape: str = "train_4k",
+                             workload: Mapping[str, Any] | None = None,
+                             **kw):
+    from ..core.tpu_machine import (DistributedTunable, TPUWorkload,
+                                    workload_from_arch)
+    if workload is not None:
+        w = TPUWorkload(**dict(workload))
+    elif arch is not None:
+        w = workload_from_arch(arch, shape)
+    else:
+        raise ValueError("tpu.distributed needs arch= (+shape=) or workload=")
+    return DistributedTunable(w, **kw)
+
+
+def _meta_engine_factory(*, inner: Mapping[str, Any], engine: str = "measure",
+                         space: Mapping[str, Sequence[Any]] | None = None,
+                         oracle_call_penalty: float = 1e-3):
+    inner_tunable = build_tunable(inner["tunable"], inner.get("params"))
+    return MetaEngineTunable(inner_tunable, engine=engine, space=space,
+                             oracle_call_penalty=oracle_call_penalty)
+
+
+# ---------------------------------------------------------------------------
+# MetaEngineTunable — tuning the tuner
+# ---------------------------------------------------------------------------
+
+
+class MetaEngineTunable:
+    """Another tuning run's engine kwargs as this tunable's lattice.
+
+    ``cost(cfg)`` runs ``tune(inner, engine=..., cache=None, **cfg)`` for
+    real (caching disabled — every meta point must actually search) and
+    scores ``t_min * (1 + oracle_call_penalty * oracle_calls)``: result
+    quality, multiplicatively penalized by search effort, so between
+    equal-quality settings the cheaper search wins and a bigger
+    shortlist only wins when it finds a genuinely faster configuration.
+    The per-point inner results stay inspectable in :attr:`trials`.
+    """
+
+    DEFAULT_SPACE: dict[str, tuple[Any, ...]] = {"top_k": (1, 2, 4),
+                                                 "repeats": (1, 3)}
+
+    def __init__(self, inner, *, engine: str = "measure",
+                 space: Mapping[str, Sequence[Any]] | None = None,
+                 oracle_call_penalty: float = 1e-3):
+        self.inner = inner
+        self.engine = engine
+        self._space = {k: tuple(v)
+                       for k, v in (space or self.DEFAULT_SPACE).items()}
+        self.oracle_call_penalty = oracle_call_penalty
+        inner_name = getattr(inner, "name", type(inner).__name__)
+        self.name = f"meta.engine[{inner_name}/{engine}]"
+        self.trials: dict[tuple, TuneResult] = {}
+
+    def space(self) -> SearchSpace:
+        return SearchSpace(params=[Param(k, v)
+                                   for k, v in self._space.items()])
+
+    def cost(self, cfg: Mapping[str, Any]) -> float:
+        res = tune(self.inner, engine=self.engine, cache=None, **dict(cfg))
+        self.trials[tuple(sorted(cfg.items()))] = res
+        return res.t_min * (1.0 + self.oracle_call_penalty
+                            * res.oracle_calls)
+
+    def fingerprint(self) -> dict[str, Any]:
+        return {"tunable": "meta.engine", "engine": self.engine,
+                "inner": dict(tunable_fingerprint(self.inner)),
+                "space": {k: list(v) for k, v in self._space.items()},
+                "oracle_call_penalty": self.oracle_call_penalty}
+
+
+# ---------------------------------------------------------------------------
+# jobs / plan / report
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class TuningJob:
+    """One unit of a plan: a tunable (or zero-arg factory of one), the
+    engine to run it with, and the engine kwargs.  ``factory`` is called
+    inside :meth:`TuningPlan.run`'s per-job error boundary, so a job
+    whose construction fails is an isolated failure, not a crash."""
+
+    factory: Callable[[], Any] | Any
+    engine: str = "auto"
+    engine_kwargs: dict[str, Any] = field(default_factory=dict)
+    label: str = ""
+    force: bool = False
+
+    def materialize(self):
+        tunable = self.factory
+        if callable(tunable) and not hasattr(tunable, "space"):
+            tunable = tunable()
+        if not self.label:
+            self.label = getattr(tunable, "name", type(tunable).__name__)
+        return tunable
+
+
+@dataclass
+class JobResult:
+    label: str
+    status: str                 # hit | tuned | forced | failed
+    engine: str = ""
+    t_min: float | None = None
+    best_config: dict[str, Any] | None = None
+    provenance: str | None = None
+    key: str | None = None
+    elapsed_s: float = 0.0
+    error: str | None = None
+    result: TuneResult | None = field(default=None, repr=False)
+
+    def to_json(self) -> dict[str, Any]:
+        return {"label": self.label, "status": self.status,
+                "engine": self.engine, "t_min": self.t_min,
+                "best_config": self.best_config,
+                "provenance": self.provenance, "key": self.key,
+                "elapsed_s": round(self.elapsed_s, 6), "error": self.error}
+
+
+@dataclass
+class PlanReport:
+    plan: str
+    results: list[JobResult] = field(default_factory=list)
+
+    @property
+    def counts(self) -> dict[str, int]:
+        c = {"jobs": len(self.results), "hits": 0, "tuned": 0,
+             "forced": 0, "failed": 0}
+        bucket = {"hit": "hits", "tuned": "tuned", "forced": "forced",
+                  "failed": "failed"}
+        for r in self.results:
+            c[bucket[r.status]] += 1
+        return c
+
+    @property
+    def ok(self) -> bool:
+        return self.counts["failed"] == 0
+
+    def summary(self) -> str:
+        c = self.counts
+        return (f"plan {self.plan!r}: {c['jobs']} jobs — {c['hits']} hits, "
+                f"{c['tuned']} tuned, {c['forced']} forced, "
+                f"{c['failed']} failed")
+
+    def to_json(self) -> dict[str, Any]:
+        return {"plan": self.plan, "counts": self.counts,
+                "jobs": [r.to_json() for r in self.results]}
+
+
+class TuningPlan:
+    """A declarative batch of tuning jobs; see the module docstring."""
+
+    def __init__(self, jobs: Sequence[TuningJob] | None = None, *,
+                 name: str = "plan"):
+        self.name = name
+        self.jobs: list[TuningJob] = list(jobs or [])
+
+    def add(self, tunable_or_factory, engine: str = "auto", *,
+            label: str = "", force: bool = False,
+            **engine_kwargs: Any) -> TuningJob:
+        """Append a job (a Tunable instance or a zero-arg factory);
+        returns it for further tweaking."""
+
+        job = TuningJob(factory=tunable_or_factory, engine=engine,
+                        engine_kwargs=dict(engine_kwargs), label=label,
+                        force=force)
+        self.jobs.append(job)
+        return job
+
+    def __len__(self) -> int:
+        return len(self.jobs)
+
+    # -- spec loading -------------------------------------------------------
+
+    @classmethod
+    def from_spec(cls, spec: Mapping[str, Any] | str | Path) -> "TuningPlan":
+        """Build a plan from a dict spec, a JSON string, or a path to a
+        JSON file (module docstring documents the format)."""
+
+        if isinstance(spec, (str, Path)):
+            # a string starting with "{" is inline JSON; anything else
+            # is a file path — a typo'd path must say "file not found",
+            # not surface as a JSON parse error on the path itself
+            if isinstance(spec, str) and spec.lstrip().startswith("{"):
+                text = spec
+            else:
+                text = Path(spec).expanduser().read_text()
+            spec = json.loads(text)
+        if not isinstance(spec, Mapping):
+            raise ValueError("plan spec must be a mapping with a 'jobs' list")
+        plan = cls(name=str(spec.get("name", "plan")))
+        for i, jspec in enumerate(spec.get("jobs", [])):
+            for params, suffix in _expand_grid(jspec):
+                name = jspec.get("tunable")
+                if not name:
+                    raise ValueError(f"job #{i}: missing 'tunable' name")
+                label = jspec.get("label", name) + suffix
+                # bind via defaults: the factory resolves lazily inside
+                # run()'s error boundary, so a bad spec fails one job
+                plan.add(lambda name=name, params=params:
+                         build_tunable(name, params),
+                         engine=jspec.get("engine", "auto"), label=label,
+                         force=bool(jspec.get("force", False)),
+                         **dict(jspec.get("engine_kwargs", {})))
+        return plan
+
+    # -- execution ----------------------------------------------------------
+
+    def run(self, *, cache="default", force: bool = False,
+            progress: Callable[[str], None] | None = None,
+            save: bool = True) -> PlanReport:
+        """Execute every job through :func:`repro.tune.tune`.
+
+        Cache hits skip the engine (``force=True`` — plan-wide or
+        per-job — re-tunes and overwrites); a failing job is recorded
+        and the plan continues.  ``save=True`` flushes a dirty
+        :class:`TuningCache` at the end so a warm-up actually persists.
+        """
+
+        store = default_cache() if cache == "default" else cache
+        report = PlanReport(plan=self.name)
+        say = progress or (lambda line: None)
+        for i, job in enumerate(self.jobs):
+            t0 = time.perf_counter()
+            label = job.label or f"job#{i}"
+            try:
+                tunable = job.materialize()
+                label = job.label
+                res = tune(tunable, engine=job.engine, cache=store,
+                           force=force or job.force, **job.engine_kwargs)
+                status = {"hit": "hit", "force": "forced"}.get(
+                    res.stats.get("cache"), "tuned")
+                jr = JobResult(
+                    label=label, status=status, engine=res.engine,
+                    t_min=res.t_min, best_config=dict(res.best_config),
+                    provenance=res.stats.get("provenance"),
+                    key=res.stats.get("key"),
+                    elapsed_s=time.perf_counter() - t0, result=res)
+                say(f"[{i + 1}/{len(self.jobs)}] {label}: {status} "
+                    f"({res.engine}) t_min={res.t_min:g} "
+                    f"config={jr.best_config} [{jr.elapsed_s:.2f}s]")
+            except Exception as e:          # per-job isolation
+                jr = JobResult(label=label, status="failed",
+                               engine=job.engine,
+                               elapsed_s=time.perf_counter() - t0,
+                               error=f"{type(e).__name__}: {e}")
+                say(f"[{i + 1}/{len(self.jobs)}] {label}: FAILED — "
+                    f"{jr.error}")
+            report.results.append(jr)
+        if save and isinstance(store, TuningCache) and store.dirty:
+            store.save()
+        say(report.summary())
+        return report
+
+
+def _expand_grid(jspec: Mapping[str, Any]):
+    """Yield (params, label_suffix) for each point of the job's ``grid``
+    (cartesian product over list-valued entries), merged over ``params``."""
+
+    base = dict(jspec.get("params", {}))
+    grid = {k: list(v) for k, v in dict(jspec.get("grid", {})).items()}
+    if not grid:
+        yield base, ""
+        return
+    names = sorted(grid)
+    for combo in itertools.product(*(grid[n] for n in names)):
+        point = dict(zip(names, combo))
+        suffix = "[" + ",".join(f"{k}={v}" for k, v in point.items()) + "]"
+        yield {**base, **point}, suffix
+
+
+__all__ = ["TuningPlan", "TuningJob", "JobResult", "PlanReport",
+           "MetaEngineTunable", "register_tunable", "available_tunables",
+           "build_tunable"]

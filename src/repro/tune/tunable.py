@@ -88,7 +88,7 @@ def _function_identity(fn: Callable) -> dict[str, Any]:
 
 
 class FunctionTunable:
-    """Adapt a bare ``cost_fn`` + space to the protocol (the old
+    """Adapt a bare ``cost_fn`` + space to the protocol (the seed's
     ``FunctionTuner`` calling convention).
 
     For reliable caching pass an explicit ``fingerprint``; the default

@@ -50,6 +50,43 @@ def test_attention_use_flash_non_causal():
                                rtol=2e-5, atol=2e-4)
 
 
+def test_forward_lm_threads_use_flash():
+    """``cfg.use_flash`` routes whole-model self-attention through the
+    flash path (the per-call-site flag threaded via the config); the
+    logits must match the pure-JAX default at fp32 tolerance."""
+
+    from repro.configs import get_config as _gc
+    from repro.models import build_model
+    cfg = _gc("smollm-135m").reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    toks = jnp.asarray(np.random.default_rng(0).integers(
+        0, cfg.vocab, (2, 128)), jnp.int32)
+    ref = api.forward(params, {"tokens": toks})
+    got = build_model(cfg.replace(use_flash=True)).forward(
+        params, {"tokens": toks})
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-4)
+
+
+def test_registry_flash_default_and_smoke_fallback():
+    """qwen1.5-4b opts into the flash path by default; its reduced
+    smoke shapes are untileable so forward still runs (pure-JAX
+    fallback per call site)."""
+
+    from repro.configs import get_config as _gc
+    from repro.models import build_model
+    cfg = _gc("qwen1.5-4b")
+    assert cfg.use_flash
+    api = build_model(cfg.reduced())
+    assert api.cfg.use_flash                     # survives reduced()
+    params = api.init(jax.random.PRNGKey(0))
+    toks = jnp.asarray(np.random.default_rng(0).integers(
+        0, api.cfg.vocab, (1, 20)), jnp.int32)   # 20 % 128 != 0 -> fallback
+    out = api.forward(params, {"tokens": toks})
+    assert np.isfinite(np.asarray(out)).all()
+
+
 def test_attention_use_flash_falls_back_on_untileable_seq():
     """S not divisible by the 128-lane block cannot go through the
     kernel; use_flash must silently take the pure-JAX path."""

@@ -7,12 +7,13 @@ import pytest
 from _hypothesis_stub import hypothesis, st  # skips property tests if absent
 
 from repro.core import (
-    AutoTuner, Counterexample, NonTermination, OverTime, PlatformSpec,
+    Counterexample, NonTermination, OverTime, PlatformSpec,
     WaveParams, build_model, explore, find_minimal_time, model_time,
     model_time_jnp, replay, swarm_search, sweep_times, trace_satisfies,
     wg_ts_space,
 )
 from repro.core.sweep import cex_oracle
+from repro.tune import PlatformTunable, tune
 
 settings = hypothesis.settings(max_examples=20, deadline=None,
                                suppress_health_check=list(hypothesis.HealthCheck))
@@ -171,9 +172,9 @@ def test_sweep_matches_exhaustive_enumeration():
 
 def test_engines_agree_on_optimum():
     spec = PlatformSpec(size=8, NP=4, GMT=4, kind="minimum")
-    tuner = AutoTuner(spec)
-    r_sweep = tuner.tune(engine="sweep")
-    r_swarm = tuner.tune(engine="swarm", n_walks=12, seed=1)
+    tunable = PlatformTunable(spec)
+    r_sweep = tune(tunable, engine="sweep", cache=None)
+    r_swarm = tune(tunable, engine="swarm", cache=None, n_walks=12, seed=1)
     assert r_sweep.t_min == r_swarm.t_min
     wp = WaveParams(size=8, NP=4, GMT=4, kind="minimum")
     assert model_time(wp, **{k: r_sweep.best_config[k] for k in ("WG", "TS")}
@@ -183,9 +184,9 @@ def test_engines_agree_on_optimum():
 @pytest.mark.slow
 def test_explorer_engine_agrees():
     spec = PlatformSpec(size=8, NP=4, GMT=4, kind="abstract")
-    tuner = AutoTuner(spec)
-    r_exp = tuner.tune(engine="explorer")
-    r_sweep = tuner.tune(engine="sweep")
+    tunable = PlatformTunable(spec)
+    r_exp = tune(tunable, engine="explorer", cache=None)
+    r_sweep = tune(tunable, engine="sweep", cache=None)
     assert r_exp.t_min == r_sweep.t_min == 44
 
 
@@ -263,7 +264,8 @@ def test_branch_and_bound_engine():
 
     for size, kind in [(8, "abstract"), (16, "minimum")]:
         spec = PlatformSpec(size=size, NP=4, GMT=4, kind=kind)
-        rb = AutoTuner(spec).tune(engine="bnb")
-        rs = AutoTuner(spec).tune(engine="sweep")
+        tunable = PlatformTunable(spec)
+        rb = tune(tunable, engine="bnb", cache=None)
+        rs = tune(tunable, engine="sweep", cache=None)
         assert rb.t_min == rs.t_min
         assert rb.witness.validate(build_model(spec))

@@ -9,8 +9,7 @@ import pytest
 
 from repro.configs import get_config
 from repro.configs.base import ShapeSpec
-from repro.core import (AutoTuner, FunctionTuner, PlatformSpec, WaveParams,
-                        model_time, wg_ts_space)
+from repro.core import (PlatformSpec, WaveParams, model_time, wg_ts_space)
 from repro.core.tpu_machine import (TPUConfig, TPUWorkload, hbm_fits,
                                     step_time, tune_distributed,
                                     workload_from_arch)
@@ -18,6 +17,7 @@ from repro.data import SyntheticLM
 from repro.models import build_model
 from repro.runtime import (LoopConfig, TrainConfig, build_train_step,
                            init_train_state, run_training)
+from repro.tune import FunctionTunable, PlatformTunable, tune
 
 
 def test_four_step_method_end_to_end():
@@ -25,7 +25,7 @@ def test_four_step_method_end_to_end():
     counterexample, confirm optimality against the exhaustive grid."""
 
     spec = PlatformSpec(size=32, NP=4, GMT=4, kind="minimum")
-    res = AutoTuner(spec).tune(engine="explorer")
+    res = tune(PlatformTunable(spec), engine="explorer", cache=None)
     wp = WaveParams(size=32, NP=4, GMT=4, kind="minimum")
     truth = min(model_time(wp, c["WG"], c["TS"]) for c in wg_ts_space(32))
     assert res.t_min == truth
@@ -41,7 +41,8 @@ def test_tuned_kernel_beats_naive_cost():
     n = 1 << 18
     space = red.tuning_space(n)
     costs = {cfg["block_rows"]: red.cost_model(cfg, n=n) for cfg in space}
-    res = FunctionTuner(lambda c: red.cost_model(c, n=n), space).tune()
+    res = tune(FunctionTunable(lambda c: red.cost_model(c, n=n), space),
+               engine="grid", cache=None)
     assert res.t_min == min(costs.values())
     x = jnp.asarray(np.random.default_rng(0).integers(-10**9, 10**9, n),
                     jnp.int32)

@@ -1,11 +1,9 @@
 """Unified ``repro.tune`` API tests: engine registry, persistent cache,
-``@autotune`` fast path, and old-vs-new parity."""
-
-import warnings
+``@autotune`` fast path, and cross-engine agreement."""
 
 import pytest
 
-from repro.core import AutoTuner, FunctionTuner, PlatformSpec
+from repro.core import PlatformSpec
 from repro.core.search_space import Param, SearchSpace
 from repro.core.tpu_machine import (DistributedTunable, hbm_fits,
                                     tune_distributed, workload_from_arch)
@@ -78,34 +76,32 @@ def test_platform_engine_rejects_plain_tunable():
 
 
 # ---------------------------------------------------------------------------
-# parity: legacy entry points == repro.tune
+# cross-engine agreement (the old==new parity tests retired with the
+# AutoTuner/FunctionTuner shims; the engines now pin each other)
 # ---------------------------------------------------------------------------
 
-def test_parity_autotuner_quickstart():
-    """Same best_config/t_min as the deprecated AutoTuner on the
-    quickstart platform, for every engine the seed exposed."""
+def test_engines_agree_quickstart():
+    """Every engine the seed exposed finds the same minimal time on the
+    quickstart platform (sweep is deterministic and exact)."""
 
     tunable = PlatformTunable(QUICKSTART)
-    for engine in ("sweep", "explorer", "swarm"):
-        with warnings.catch_warnings():
-            warnings.simplefilter("ignore", DeprecationWarning)
-            old = AutoTuner(QUICKSTART).tune(engine=engine)
-        new = tune(tunable, engine=engine, cache=None)
-        assert new.t_min == old.t_min, engine
-        if engine == "sweep":       # deterministic engine: exact config too
-            assert new.best_config == old.best_config
+    exact = tune(tunable, engine="sweep", cache=None)
+    from repro.core import WaveParams, model_time, wg_ts_space
+    wp = WaveParams(size=16, NP=4, GMT=4, kind="minimum")
+    assert exact.t_min == min(model_time(wp, c["WG"], c["TS"])
+                              for c in wg_ts_space(16))
+    for engine in ("explorer", "swarm"):
+        assert tune(tunable, engine=engine, cache=None).t_min == \
+            exact.t_min, engine
 
 
-def test_parity_function_tuner_matmul_cost_model():
+def test_grid_engine_matches_exhaustive_matmul_cost_model():
     M, N, K = 256, 256, 512
     space = mm.tuning_space(M, N, K)
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        old = FunctionTuner(lambda c: mm.cost_model(c, M=M, N=N, K=K),
-                            space).tune()
+    truth = min(mm.cost_model(c, M=M, N=N, K=K) for c in space)
     new = tune(mm.MatmulTunable(M, N, K), engine="grid", cache=None)
-    assert new.best_config == old.best_config
-    assert new.t_min == old.t_min
+    assert new.t_min == truth
+    assert mm.cost_model(new.best_config, M=M, N=N, K=K) == truth
 
 
 def test_bisect_engine_agrees_with_sweep():
@@ -289,7 +285,15 @@ def test_cache_force_reruns(tmp_path):
     tune(t, engine="grid", cache=cache)
     n = t.cost_calls
     res = tune(t, engine="grid", cache=cache, force=True)
-    assert t.cost_calls == 2 * n and res.stats["cache"] == "miss"
+    # a forced re-run over an existing entry is tagged "force" so
+    # rollout reports distinguish re-tunes from cold misses
+    assert t.cost_calls == 2 * n and res.stats["cache"] == "force"
+
+
+def test_force_on_cold_cache_is_a_plain_miss(tmp_path):
+    cache = TuningCache(tmp_path / "cache.json")
+    res = tune(CountingTunable(), engine="grid", cache=cache, force=True)
+    assert res.stats["cache"] == "miss"         # nothing was overwritten
 
 
 # ---------------------------------------------------------------------------
@@ -391,7 +395,7 @@ def test_force_overwrites_hit_with_fresh_provenance(tmp_path):
     assert first["provenance"] == "measured"
 
     res = tune(t, engine="measure", cache=cache, repeats=1, force=True)
-    assert res.stats["cache"] == "miss"         # engine re-ran
+    assert res.stats["cache"] == "force"        # engine re-ran, overwrote
     assert t.measure_calls == 6
     second = cache._entries[key]
     assert second["provenance"] == "measured"

@@ -1,0 +1,386 @@
+"""``repro.tune`` v2 tests: declarative TuningPlan runner, cache
+artifacts (export/merge/prune), the meta engine-kwarg tunable, the
+``python -m repro.tune`` CLI, and the fleet-rollout end-to-end slice."""
+
+import json
+import time
+
+import pytest
+
+from repro.core.search_space import Param, SearchSpace
+from repro.tune import (ArtifactError, MetaEngineTunable, TuningCache,
+                        TuningPlan, build_tunable, cache_key,
+                        set_default_cache, tune)
+from repro.tune.artifact import ARTIFACT_KIND, ARTIFACT_SCHEMA
+from repro.tune.cli import main as cli_main
+
+
+class CountingTunable:
+    name = "test.counting"
+
+    def __init__(self, ident="a"):
+        self.ident = ident
+        self.cost_calls = 0
+
+    def space(self):
+        return SearchSpace(params=[Param("block", (1, 2, 4))])
+
+    def cost(self, cfg):
+        self.cost_calls += 1
+        return 10 // cfg["block"]
+
+    def fingerprint(self):
+        return {"tunable": self.name, "ident": self.ident}
+
+
+class MeasuredTunable(CountingTunable):
+    """cost ranks block=4 best; wall-clock says block=2 (measured
+    1 + |block - 2|, floored at 1 so the meta search-effort penalty
+    stays discriminating)."""
+
+    def __init__(self, ident="a"):
+        super().__init__(ident)
+        self.measure_calls = 0
+
+    def measure(self, cfg):
+        self.measure_calls += 1
+        return 1.0 + abs(cfg["block"] - 2)
+
+
+# ---------------------------------------------------------------------------
+# TuningPlan runner
+# ---------------------------------------------------------------------------
+
+
+def test_plan_skip_on_hit_and_force(tmp_path):
+    cache = TuningCache(tmp_path / "cache.json")
+    t = CountingTunable()
+    plan = TuningPlan(name="p")
+    plan.add(t, engine="grid")
+
+    r1 = plan.run(cache=cache)
+    assert r1.counts == {"jobs": 1, "hits": 0, "tuned": 1, "forced": 0,
+                         "failed": 0}
+    n = t.cost_calls
+
+    r2 = plan.run(cache=cache)                  # skip-on-hit
+    assert r2.counts["hits"] == 1 and t.cost_calls == n
+    assert r2.results[0].best_config == r1.results[0].best_config
+
+    r3 = plan.run(cache=cache, force=True)      # force override re-tunes
+    assert r3.counts["forced"] == 1 and t.cost_calls == 2 * n
+
+
+def test_plan_per_job_failure_isolation(tmp_path):
+    """One bad job (factory raises) must not sink the plan."""
+
+    cache = TuningCache(tmp_path / "cache.json")
+
+    def bad_factory():
+        raise RuntimeError("boom at build time")
+
+    plan = TuningPlan(name="p")
+    plan.add(bad_factory, engine="grid", label="bad")
+    plan.add(CountingTunable(), engine="grid")
+    report = plan.run(cache=cache)
+    assert report.counts["failed"] == 1 and report.counts["tuned"] == 1
+    assert not report.ok
+    bad, good = report.results
+    assert bad.status == "failed" and "boom" in bad.error
+    assert good.status == "tuned" and good.best_config == {"block": 4}
+
+
+def test_plan_run_flushes_cache(tmp_path):
+    path = tmp_path / "cache.json"
+    cache = TuningCache(path)
+    plan = TuningPlan(name="p")
+    plan.add(CountingTunable(), engine="grid")
+    plan.run(cache=cache)
+    assert path.exists() and not cache.dirty    # warm-up persisted
+
+
+def test_plan_from_spec_grid_expansion_and_labels(tmp_path):
+    spec = {"name": "s", "jobs": [
+        {"tunable": "kernels.tuned_reduction", "grid": {"n": [4096, 8192]},
+         "engine": "grid"}]}
+    plan = TuningPlan.from_spec(spec)
+    assert len(plan) == 2
+    report = plan.run(cache=TuningCache(tmp_path / "c.json"))
+    assert report.ok
+    assert {r.label for r in report.results} == \
+        {"kernels.tuned_reduction[n=4096]", "kernels.tuned_reduction[n=8192]"}
+
+
+def test_plan_from_spec_inline_json_and_missing_path(tmp_path):
+    inline = TuningPlan.from_spec(
+        '{"name": "x", "jobs": [{"tunable": "kernels.tuned_reduction", '
+        '"params": {"n": 4096}, "engine": "grid"}]}')
+    assert len(inline) == 1 and inline.name == "x"
+    with pytest.raises(FileNotFoundError):
+        TuningPlan.from_spec(tmp_path / "nope.json")
+    with pytest.raises(FileNotFoundError):
+        TuningPlan.from_spec(str(tmp_path / "nope.json"))
+
+
+def test_build_tunable_unknown_name_lists_registry():
+    with pytest.raises(ValueError, match="unknown tunable"):
+        build_tunable("does.not.exist")
+    with pytest.raises(ValueError, match="kernels.matmul_tuned"):
+        build_tunable("does.not.exist")
+
+
+# ---------------------------------------------------------------------------
+# MetaEngineTunable — tuning the tuner through the same tune() path
+# ---------------------------------------------------------------------------
+
+
+def test_meta_engine_tunable_selects_top_k_and_repeats(tmp_path):
+    """The meta lattice prices (top_k, repeats) by really running the
+    measure engine: top_k=1 stops at the model's (worse) pick; top_k=2
+    reaches the wall-clock winner; the effort penalty then prefers the
+    smallest shortlist that achieves it."""
+
+    cache = TuningCache(tmp_path / "cache.json")
+    inner = MeasuredTunable()
+    meta = MetaEngineTunable(inner, engine="measure",
+                             space={"top_k": [1, 2, 4], "repeats": [1]})
+    res = tune(meta, engine="grid", cache=cache)
+    assert res.best_config == {"top_k": 2, "repeats": 1}
+    # every meta point really searched (1 + 2 + 3 measure calls)
+    assert inner.measure_calls == 6
+    # trials keep the inner results inspectable
+    t1 = meta.trials[(("repeats", 1), ("top_k", 1))]
+    t2 = meta.trials[(("repeats", 1), ("top_k", 2))]
+    assert t1.best_config == {"block": 4}       # model's pick, measured 3.0
+    assert t2.best_config == {"block": 2}       # wall-clock winner, 1.0
+
+    # cached like any tunable: the re-run is a pure hit
+    r2 = tune(meta, engine="grid", cache=cache)
+    assert r2.stats["cache"] == "hit" and inner.measure_calls == 6
+
+
+def test_meta_engine_fingerprint_keys_space_and_inner():
+    a = MetaEngineTunable(MeasuredTunable("a"), space={"top_k": [1, 2]})
+    b = MetaEngineTunable(MeasuredTunable("b"), space={"top_k": [1, 2]})
+    c = MetaEngineTunable(MeasuredTunable("a"), space={"top_k": [1, 4]})
+    assert cache_key(a, "grid")[0] != cache_key(b, "grid")[0]
+    assert cache_key(a, "grid")[0] != cache_key(c, "grid")[0]
+
+
+# ---------------------------------------------------------------------------
+# cache artifacts
+# ---------------------------------------------------------------------------
+
+
+def _warm_cache(tmp_path, name, tunables):
+    cache = TuningCache(tmp_path / name)
+    for t in tunables:
+        tune(t, engine="grid", cache=cache)
+    return cache
+
+
+def test_artifact_export_merge_roundtrip_across_caches(tmp_path):
+    src = _warm_cache(tmp_path, "src.json",
+                      [CountingTunable("a"), CountingTunable("b")])
+    art = tmp_path / "artifact.json"
+    bundle = src.export_artifact(art)
+    assert bundle["schema"] == ARTIFACT_SCHEMA
+    assert bundle["entry_count"] == 2
+
+    dst = _warm_cache(tmp_path, "dst.json", [CountingTunable("c")])
+    report = dst.merge_artifact(art)
+    assert report["added"] == 2 and report["replaced"] == 0
+    assert len(dst) == 3
+
+    # merged entries serve hits with zero engine runs
+    probe = CountingTunable("a")
+    res = tune(probe, engine="grid", cache=dst)
+    assert res.stats["cache"] == "hit" and probe.cost_calls == 0
+
+
+def test_artifact_prefer_measured_policy(tmp_path):
+    """A modeled entry must never clobber a measured one under the
+    default policy — and a measured one upgrades a modeled one."""
+
+    modeled = _warm_cache(tmp_path, "modeled.json", [MeasuredTunable()])
+    key_mod, _ = cache_key(MeasuredTunable(), "grid")
+    assert key_mod in modeled.entries
+
+    # hand-build an artifact whose entry collides with key_mod but is
+    # measured + older — prefer_measured must still replace modeled
+    entry = dict(modeled.entries[key_mod])
+    entry["provenance"] = "measured"
+    entry["created"] = entry["created"] - 1e6
+    entry["best_config"] = {"block": 2}
+    art = tmp_path / "a.json"
+    bundle = {"kind": ARTIFACT_KIND, "schema": ARTIFACT_SCHEMA,
+              "created": time.time(),
+              "platforms": {"cpu/x": {"platform": {"backend": "cpu"},
+                                      "entries": {key_mod: entry}}}}
+    art.write_text(json.dumps(bundle))
+
+    rep = modeled.merge_artifact(art)               # measured wins
+    assert rep["replaced"] == 1
+    assert modeled.entries[key_mod]["best_config"] == {"block": 2}
+
+    # ... and the reverse direction: modeled-over-measured is kept out
+    entry2 = dict(entry)
+    entry2["provenance"] = "modeled"
+    entry2["created"] = time.time() + 1e6           # even though newer
+    bundle["platforms"]["cpu/x"]["entries"] = {key_mod: entry2}
+    art.write_text(json.dumps(bundle))
+    rep2 = modeled.merge_artifact(art)
+    assert rep2["kept"] == 1 and rep2["replaced"] == 0
+    assert modeled.entries[key_mod]["provenance"] == "measured"
+
+
+def test_artifact_stale_schema_rejected(tmp_path):
+    src = _warm_cache(tmp_path, "src.json", [CountingTunable()])
+    art = tmp_path / "a.json"
+    bundle = src.export_artifact(art)
+    doc = json.loads(art.read_text())
+    doc["schema"] = ARTIFACT_SCHEMA + 1
+    art.write_text(json.dumps(doc))
+    with pytest.raises(ArtifactError, match="schema"):
+        src.merge_artifact(art)
+    # and a random JSON file is not an artifact at all
+    (tmp_path / "junk.json").write_text('{"hello": 1}')
+    with pytest.raises(ArtifactError, match="not a"):
+        src.merge_artifact(tmp_path / "junk.json")
+    assert bundle["entry_count"] == 1               # export untouched
+
+
+def test_artifact_platform_filter(tmp_path, monkeypatch):
+    cache = TuningCache(tmp_path / "c.json")
+    tune(CountingTunable("cpu-side"), engine="grid", cache=cache)
+    monkeypatch.setattr("repro.tune.cache.platform_fingerprint",
+                        lambda: {"backend": "tpu", "device_kind": "v5e"})
+    tune(CountingTunable("tpu-side"), engine="grid", cache=cache)
+    b_all = cache.export_artifact(tmp_path / "all.json")
+    assert len(b_all["platforms"]) == 2
+    b_tpu = cache.export_artifact(tmp_path / "tpu.json", platform="tpu")
+    assert list(b_tpu["platforms"]) == ["tpu/v5e"]
+    assert b_tpu["entry_count"] == 1 and b_tpu["skipped"] == 1
+
+
+def test_dirty_cache_survives_gc_until_flushed(tmp_path):
+    """Deferred puts must not be lost when a short-lived cache goes out
+    of scope: the dirty registry holds a strong reference until save()
+    (the atexit flush then covers normal shutdown)."""
+
+    import gc
+    import weakref
+
+    from repro.tune.cache import _dirty_caches
+    cache = TuningCache(tmp_path / "c.json")
+    tune(CountingTunable(), engine="grid", cache=cache)
+    assert cache.dirty
+    ref = weakref.ref(cache)
+    del cache
+    gc.collect()
+    alive = ref()
+    assert alive is not None and alive in _dirty_caches  # pinned while dirty
+    alive.save()
+    assert alive not in _dirty_caches
+    del alive
+    gc.collect()
+    assert ref() is None                                 # released once clean
+    assert len(TuningCache(tmp_path / "c.json")) == 1
+
+
+def test_cache_prune_by_backend_and_staleness(tmp_path):
+    cache = _warm_cache(tmp_path, "c.json",
+                        [CountingTunable("a"), CountingTunable("b")])
+    key_a, _ = cache_key(CountingTunable("a"), "grid")
+    cache._entries[key_a]["created"] -= 10 * 86400      # age one entry
+    with pytest.raises(ValueError, match="prune needs"):
+        cache.prune()
+    assert cache.prune(backend="tpu") == 0              # no tpu entries
+    assert cache.prune(stale_days=5) == 1               # the aged one
+    assert cache.prune(backend="cpu") == 1              # the rest
+    assert len(cache) == 0
+
+
+# ---------------------------------------------------------------------------
+# CLI: python -m repro.tune warmup/export/merge/ls/prune
+# ---------------------------------------------------------------------------
+
+
+def _tiny_plan(tmp_path):
+    spec = {"name": "ci", "jobs": [
+        {"tunable": "kernels.matmul_tuned",
+         "params": {"M": 128, "N": 128, "K": 128, "dtype_bytes": 4},
+         "engine": "grid"},
+        {"tunable": "kernels.tuned_reduction", "params": {"n": 4096},
+         "engine": "grid"}]}
+    p = tmp_path / "plan.json"
+    p.write_text(json.dumps(spec))
+    return p
+
+
+def test_cli_fleet_rollout_end_to_end(tmp_path, capsys):
+    """warmup -> export -> merge into a fresh cache -> second warmup is
+    100% hits -> @autotune resolves from pure cache hits (0 engine
+    runs) — the rollout acceptance slice."""
+    plan = _tiny_plan(tmp_path)
+    warm = str(tmp_path / "warm.json")
+    node = str(tmp_path / "node.json")
+    art = str(tmp_path / "artifact.json")
+    assert cli_main(["--cache", warm, "warmup", str(plan)]) == 0
+    assert cli_main(["--cache", warm, "export", art]) == 0
+    assert cli_main(["--cache", node, "merge", art]) == 0
+    capsys.readouterr()
+
+    assert cli_main(["--cache", node, "warmup", str(plan), "--json"]) == 0
+    rep = json.loads(capsys.readouterr().out)
+    assert rep["counts"]["hits"] == rep["counts"]["jobs"] == 2
+    assert rep["counts"]["failed"] == 0
+
+    # a fleet node resolves @autotune block sizes from the merged cache
+    import jax.numpy as jnp
+    from repro.kernels.matmul_tuned.ops import matmul_tuned
+    node_cache = TuningCache(node)
+    prev = set_default_cache(node_cache)
+    try:
+        a = jnp.ones((128, 128), jnp.float32)
+        decision = matmul_tuned.tune(a, a)
+        assert decision.stats["cache"] == "hit"
+        assert node_cache.misses == 0
+    finally:
+        set_default_cache(prev)
+
+
+def test_cli_warmup_exit_code_on_failure(tmp_path, capsys):
+    p = tmp_path / "plan.json"
+    p.write_text(json.dumps({"jobs": [{"tunable": "nope"}]}))
+    assert cli_main(["--cache", str(tmp_path / "c.json"),
+                     "warmup", str(p)]) == 1
+    assert "FAILED" in capsys.readouterr().out
+
+
+def test_cli_ls_and_prune(tmp_path, capsys):
+    plan = _tiny_plan(tmp_path)
+    cache = str(tmp_path / "c.json")
+    assert cli_main(["--cache", cache, "warmup", str(plan)]) == 0
+    capsys.readouterr()
+    assert cli_main(["--cache", cache, "ls", "--json"]) == 0
+    rows = json.loads(capsys.readouterr().out)
+    assert len(rows) == 2
+    assert {r["tunable"] for r in rows} == \
+        {"kernels.matmul_tuned", "kernels.tuned_reduction"}
+    # machine-readable keys are the FULL sha256, correlatable with
+    # warmup-report stats["key"] and artifact entry keys
+    assert all(len(r["key"]) == 64 for r in rows)
+    assert cli_main(["--cache", cache, "prune"]) == 2   # no filters: refuse
+    assert cli_main(["--cache", cache, "prune", "--stale-days", "0"]) == 0
+    capsys.readouterr()
+    assert cli_main(["--cache", cache, "ls"]) == 0
+    assert "empty" in capsys.readouterr().out
+
+
+def test_cli_merge_rejects_non_artifact(tmp_path, capsys):
+    junk = tmp_path / "junk.json"
+    junk.write_text("{}")
+    assert cli_main(["--cache", str(tmp_path / "c.json"),
+                     "merge", str(junk)]) == 2
+    assert "error" in capsys.readouterr().err
