@@ -1,0 +1,108 @@
+"""Chunked vs tokenwise serving-side prefill: the drain table.
+
+Long prompts used to cost one full engine tick per prompt token —
+weight-stream-bound token-at-a-time exactly where a chunked pass
+amortizes it.  This benchmark drains the same long-prompt load through
+real :class:`~repro.runtime.serve.Server` instances at increasing
+``prefill_chunk`` sizes (chunk=1 is the tokenwise baseline) and prints
+ticks + wall-clock per setting, then lets ``repro.tune`` pick the chunk
+through the same modeled-cost path the fleet uses
+(:class:`~repro.runtime.serve.PrefillChunkTunable`).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.runtime.serve import Server, prefill_chunk_tunable
+from repro.tune import tune
+
+SMOKE = dict(prompt_len=512, requests=2, batch=2, max_new=4,
+             chunks=(1, 16, 64))
+FULL = dict(prompt_len=2048, requests=8, batch=4, max_new=16,
+            chunks=(1, 16, 64, 256))
+
+
+def _drain(api, params, *, prompt_len, requests, batch, max_new,
+           context, chunk) -> tuple[int, float]:
+    """(engine ticks, wall seconds) to drain the load at this chunk."""
+
+    vocab = api.cfg.vocab
+
+    def load():
+        srv = Server(api, params, batch=batch, context=context,
+                     prefill_chunk=chunk)
+        for r in range(requests):
+            srv.submit([(r + i) % (vocab - 1) + 1
+                        for i in range(prompt_len)], max_new=max_new)
+        return srv
+
+    srv = load()                         # warmup: absorb jit compiles
+    srv.run_until_drained(max_ticks=1_000_000)
+    srv = load()
+    ticks = 0
+    t0 = time.perf_counter()
+    while srv.queue or any(r is not None for r in srv.slot_req):
+        srv.tick()
+        ticks += 1
+    return ticks, time.perf_counter() - t0
+
+
+def run(csv: list[str], *, arch: str = "smollm-135m", prompt_len: int = 512,
+        requests: int = 2, batch: int = 2, max_new: int = 4,
+        chunks=(1, 16, 64)) -> None:
+    print("\n== chunked serving-side prefill: drain ticks + wall-clock ==")
+    cfg = get_config(arch).reduced().replace(logits_dtype="float32")
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    context = prompt_len + max_new
+
+    print(f"{arch} (reduced): {requests} requests x {prompt_len}-token "
+          f"prompts + {max_new} new, {batch} slots")
+    print(f"  {'chunk':>6} {'ticks':>7} {'wall_ms':>9} {'speedup':>8}")
+    # the tokenwise (chunk=1) baseline anchors the table — force it first
+    chunks = (1, *[c for c in chunks if c != 1])
+    rows = {}
+    for chunk in chunks:
+        ticks, wall = _drain(api, params, prompt_len=prompt_len,
+                             requests=requests, batch=batch,
+                             max_new=max_new, context=context, chunk=chunk)
+        rows[chunk] = (ticks, wall)
+        base_wall = rows[1][1]
+        print(f"  {chunk:>6} {ticks:>7} {wall * 1e3:>9.1f} "
+              f"{base_wall / wall:>7.2f}x"
+              f"{'  (tokenwise baseline)' if chunk == 1 else ''}")
+        csv.append(f"prefill_chunk{chunk},{wall * 1e6 / max(ticks, 1):.1f},"
+                   f"ticks={ticks};wall_ms={wall * 1e3:.1f}")
+
+    # the tuned pick, through the same modeled-cost path the fleet uses
+    tb = prefill_chunk_tunable(api, context=context, prompt_len=prompt_len,
+                               requests=requests, max_new=max_new,
+                               batch=batch, params=params)
+    res = tune(tb, engine="grid", cache=None)
+    print(f"  modeled pick: chunk={res.best_config['chunk']} "
+          f"(drain {res.t_min / 1e3:.1f} ms modeled)")
+    csv.append(f"prefill_tuned,{res.t_min:.1f},"
+               f"chunk={res.best_config['chunk']}")
+
+    chunked = {c: tw for c, tw in rows.items() if c != 1}
+    if chunked:
+        c, (t, w) = min(chunked.items(), key=lambda kv: kv[1][1])
+        base_t, base_w = rows[1]
+        print(f"  best measured: chunk={c} — {base_t}→{t} ticks, "
+              f"{base_w / w:.2f}x wall-clock vs tokenwise")
+
+
+def main() -> None:
+    csv: list[str] = []
+    run(csv, **FULL)
+    for line in csv:
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

@@ -7,6 +7,7 @@ the full ``repro.tune`` path (grid engine + cache hit/miss) plus the
 Table 3 model sweep — end-to-end tuning in well under a minute.
 ``--measure`` runs only the modeled-vs-measured comparison (the
 ``measure`` engine on real kernels, interpret mode on CPU, tiny shapes).
+``--prefill`` runs only the chunked-vs-tokenwise serving prefill drain.
 """
 
 from __future__ import annotations
@@ -21,21 +22,26 @@ def main(argv=None) -> None:
                     help="CI subset: one tuning benchmark end-to-end")
     ap.add_argument("--measure", action="store_true",
                     help="measure-engine smoke only (modeled vs measured)")
+    ap.add_argument("--prefill", action="store_true",
+                    help="chunked-vs-tokenwise serving prefill drain only")
     args = ap.parse_args(argv)
 
-    from benchmarks import (bench_measure, bench_roofline, bench_sweep,
-                            bench_table1, bench_table2, bench_table3,
-                            bench_tpu_tuning)
+    from benchmarks import (bench_measure, bench_prefill, bench_roofline,
+                            bench_sweep, bench_table1, bench_table2,
+                            bench_table3, bench_tpu_tuning)
 
     csv: list[str] = []
     t0 = time.perf_counter()
     if args.measure:
         bench_measure.run(csv)
+    elif args.prefill:
+        bench_prefill.run(csv, **bench_prefill.SMOKE)
     elif args.smoke:
         bench_table3.run(csv)
         bench_tpu_tuning.run(csv, cells=[("minitron-8b", "train_4k", 1)])
         bench_tpu_tuning.run_cache(csv)
         bench_measure.run(csv)
+        bench_prefill.run(csv, **bench_prefill.SMOKE)
     else:
         bench_table1.run(csv)
         bench_table2.run(csv)
@@ -46,6 +52,7 @@ def main(argv=None) -> None:
         bench_tpu_tuning.run_cache(csv)
         bench_measure.run(csv, cases=bench_measure.FULL_CASES,
                           top_k=4, repeats=3)
+        bench_prefill.run(csv, **bench_prefill.FULL)
         bench_roofline.run(csv)
     dt = time.perf_counter() - t0
 

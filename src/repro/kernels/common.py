@@ -21,6 +21,18 @@ def is_cpu() -> bool:
     return jax.default_backend() == "cpu"
 
 
+def median(samples) -> float:
+    """True median: mean of the middle pair for even counts.
+    ``sorted[n // 2]`` picked the upper-middle sample — with two
+    samples that returned the *worse* time.  The one median every
+    measurement path (``time_fn``, the measure engine) shares."""
+
+    s = sorted(samples)
+    n = len(s)
+    mid = n // 2
+    return s[mid] if n % 2 else 0.5 * (s[mid - 1] + s[mid])
+
+
 def resolve_interpret(interpret: bool | None) -> bool:
     """Default Pallas interpret mode: on for CPU, off on accelerators."""
 
@@ -42,8 +54,7 @@ def time_fn(fn, *, warmup: int = 1, iters: int = 3) -> float:
         t0 = time.perf_counter()
         jax.block_until_ready(fn())
         samples.append((time.perf_counter() - t0) * 1e6)
-    samples.sort()
-    return samples[len(samples) // 2]
+    return median(samples)
 
 
-__all__ = ["is_cpu", "resolve_interpret", "time_fn"]
+__all__ = ["is_cpu", "median", "resolve_interpret", "time_fn"]

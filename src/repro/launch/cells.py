@@ -21,7 +21,6 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs import SHAPES, get_config, supports
 from ..configs.base import ArchConfig, ShapeSpec
@@ -274,14 +273,17 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                 from ..distribute.sharding import arg_sharding
                 tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
                 tok_sh = arg_sharding((B, 1), ("batch", None), mesh, rules)
-                cur = jax.ShapeDtypeStruct((), jnp.int32)
+                # (B,) per-slot position vector — the continuous-batching
+                # server's actual feed; a scalar spec lowered a different
+                # decode_step than serving runs
+                cur = jax.ShapeDtypeStruct((B,), jnp.int32)
+                cur_sh = arg_sharding((B,), ("batch",), mesh, rules)
 
                 def serve_step(params, state, tokens, cur_len):
                     return api.decode_step(params, state, tokens, cur_len)
 
                 fn = jax.jit(serve_step,
-                             in_shardings=(p_sh, d_sh, tok_sh,
-                                           NamedSharding(mesh, P())),
+                             in_shardings=(p_sh, d_sh, tok_sh, cur_sh),
                              out_shardings=(None, d_sh),
                              donate_argnums=(1,))
                 t0 = time.perf_counter()

@@ -15,7 +15,8 @@ import numpy as np
 
 from ..configs import get_config
 from ..models import build_model
-from ..runtime.serve import Server, decode_batch_tunable
+from ..runtime.serve import (Server, decode_batch_tunable,
+                             prefill_chunk_tunable)
 
 
 def main(argv=None) -> None:
@@ -27,13 +28,17 @@ def main(argv=None) -> None:
     ap.add_argument("--context", type=int, default=64)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=6)
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="prompt tokens per chunked-prefill tick")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--tune-batch", action="store_true",
                     help="pick the slot count via repro.tune")
+    ap.add_argument("--tune-prefill", action="store_true",
+                    help="pick the prefill chunk size via repro.tune")
     ap.add_argument("--tune-engine", default="grid",
-                    help="tuning engine for --tune-batch; 'measure' "
-                         "refines the modeled pick with real server "
-                         "drains (wall-clock)")
+                    help="tuning engine for --tune-batch/--tune-prefill; "
+                         "'measure' refines the modeled pick with real "
+                         "server drains (wall-clock)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -42,23 +47,39 @@ def main(argv=None) -> None:
     api = build_model(cfg)
     params = api.init(jax.random.PRNGKey(args.seed))
 
-    batch = args.batch
-    if args.tune_batch:
+    def run_job(tunable, label, key):
         from ..tune import TuningPlan
+        plan = TuningPlan(name=f"serve.{args.arch}")
+        plan.add(tunable, engine=args.tune_engine, label=label)
+        job = plan.run(progress=None).results[0]
+        if job.status == "failed":
+            raise RuntimeError(f"--tune-{label} failed: {job.error}")
+        picked = int(job.best_config[key])
+        print(f"[tune] {key}={picked} "
+              f"{job.provenance or 'modeled'} drain="
+              f"{job.t_min / 1e3:.1f} ms (engine={job.engine}, "
+              f"cache {job.status})")
+        return picked
+
+    batch = args.batch
+    prefill_chunk = args.prefill_chunk
+    if args.tune_batch:
         tb = decode_batch_tunable(api, context=args.context,
                                   requests=args.requests,
                                   max_new=args.max_new, params=params)
-        plan = TuningPlan(name=f"serve.{args.arch}")
-        plan.add(tb, engine=args.tune_engine, label="decode-batch")
-        job = plan.run(progress=None).results[0]
-        if job.status == "failed":
-            raise RuntimeError(f"--tune-batch failed: {job.error}")
-        batch = int(job.best_config["batch"])
-        print(f"[tune] batch={batch} {job.provenance or 'modeled'} drain="
-              f"{job.t_min / 1e3:.1f} ms (engine={job.engine}, "
-              f"cache {job.status})")
+        batch = run_job(tb, "batch", "batch")
+    if args.tune_prefill:
+        # after --tune-batch so the chunk is tuned (and cached) for the
+        # slot count the server will actually run
+        tp = prefill_chunk_tunable(api, context=args.context,
+                                   prompt_len=args.prompt_len,
+                                   requests=args.requests,
+                                   max_new=args.max_new,
+                                   batch=batch, params=params)
+        prefill_chunk = run_job(tp, "prefill", "chunk")
 
-    server = Server(api, params, batch=batch, context=args.context)
+    server = Server(api, params, batch=batch, context=args.context,
+                    prefill_chunk=prefill_chunk)
     rng = np.random.default_rng(args.seed)
     for _ in range(args.requests):
         prompt = rng.integers(0, cfg.vocab, args.prompt_len).tolist()

@@ -137,7 +137,7 @@ class ModelAPI:
         cur_len = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32),
                                    (tokens.shape[0],))
         if cfg.is_encdec:
-            x = x + _sinusoid_at(cur_len, cfg.d_model, x.dtype)
+            x = x + _sinusoid_at(cur_len[:, None], cfg.d_model, x.dtype)
 
         body = make_decode_body(cfg, kinds, cur_len)
 
@@ -148,6 +148,52 @@ class ModelAPI:
             xs = (params["blocks"], state["blocks"])
         x, new_blocks = jax.lax.scan(body, x, xs)
         logits = _logits(params, cfg, x)[:, 0]
+        new_state = dict(state)
+        new_state["blocks"] = new_blocks
+        return logits, new_state
+
+    def prefill_step(self, params, state, tokens: jax.Array,
+                     positions: jax.Array, lengths: jax.Array | None = None):
+        """Chunked serving-side prefill: advance a CHUNK of prompt
+        tokens per call against the decode caches.
+
+        tokens: (B, T) — one chunk per slot; positions: (B,) per-slot
+        count of tokens already in the cache; lengths: (B,) valid tokens
+        of this chunk per slot (default: all T).  Slots with length 0
+        (decoding or idle while others prefill) are untouched: padding
+        tokens neither write the KV ring nor advance SSM state.
+
+        Returns ``(logits (B, V), new state)`` where each slot's logits
+        are read at its LAST valid chunk token — the next-token
+        distribution a tokenwise prefill would reach after feeding the
+        same tokens one tick at a time."""
+
+        cfg = self.cfg
+        kinds, _ = _block_plan(cfg)
+        B, T = tokens.shape
+        positions = jnp.broadcast_to(jnp.asarray(positions, jnp.int32), (B,))
+        if lengths is None:
+            lengths = jnp.full((B,), T, jnp.int32)
+        lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (B,))
+        valid = jnp.arange(T, dtype=jnp.int32)[None, :] < lengths[:, None]
+        x = jnp.take(params["embed"], tokens, axis=0)       # (B,T,d)
+        if cfg.is_encdec:
+            pos_grid = positions[:, None] + jnp.arange(T, dtype=jnp.int32)
+            x = x + _sinusoid_at(pos_grid, cfg.d_model, x.dtype)
+
+        body = make_prefill_body(cfg, kinds, positions, lengths, valid)
+
+        if cfg.is_encdec:
+            xs = (params["blocks"], state["blocks"],
+                  params["xattn_blocks"], state["xattn"])
+        else:
+            xs = (params["blocks"], state["blocks"])
+        x, new_blocks = jax.lax.scan(body, x, xs)
+        # logits only at each slot's last valid token: (B, T, V) never
+        # materializes
+        li = jnp.clip(lengths - 1, 0, T - 1)
+        h_last = jnp.take_along_axis(x, li[:, None, None], axis=1)
+        logits = _logits(params, cfg, h_last)[:, 0]
         new_state = dict(state)
         new_state["blocks"] = new_blocks
         return logits, new_state
@@ -177,9 +223,17 @@ class ModelAPI:
         return jax.lax.map(one, params["xattn_blocks"])
 
     # -- assigned-shape input specs ----------------------------------------
-    def input_specs(self, shape: ShapeSpec, *, reduced: bool = False) -> dict:
+    def input_specs(self, shape: ShapeSpec, *, reduced: bool = False,
+                    prefill_chunk: int | None = None) -> dict:
         """ShapeDtypeStruct stand-ins for every model input of a shape
-        (the dry-run contract; no allocation)."""
+        (the dry-run contract; no allocation).
+
+        For decode shapes, ``cur_len`` is the (B,) per-slot position
+        vector the continuous-batching server actually feeds — a scalar
+        spec lowered a different ``decode_step`` than serving runs.
+        ``prefill_chunk=T`` instead describes the chunked
+        :meth:`prefill_step` inputs (tokens (B, T) + per-slot positions
+        and lengths)."""
 
         cfg = self.cfg
         B, S = shape.global_batch, shape.seq_len
@@ -194,10 +248,18 @@ class ModelAPI:
                 out["frames"] = jax.ShapeDtypeStruct(
                     (B, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
             return out
-        # decode: one new token + state of length S
+        state = abstract_params(self.decode_state_specs(B, S))
+        if prefill_chunk is not None:
+            # chunked serving-side prefill step
+            return {"tokens": jax.ShapeDtypeStruct((B, prefill_chunk),
+                                                   jnp.int32),
+                    "state": state,
+                    "positions": jax.ShapeDtypeStruct((B,), jnp.int32),
+                    "lengths": jax.ShapeDtypeStruct((B,), jnp.int32)}
+        # decode: one new token per slot + state of length S
         return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
-                "state": abstract_params(self.decode_state_specs(B, S)),
-                "cur_len": jax.ShapeDtypeStruct((), jnp.int32)}
+                "state": state,
+                "cur_len": jax.ShapeDtypeStruct((B,), jnp.int32)}
 
 
 def make_decode_body(cfg: ArchConfig, kinds: list[str], cur_len: jax.Array):
@@ -253,15 +315,75 @@ def make_decode_body(cfg: ArchConfig, kinds: list[str], cur_len: jax.Array):
     return body
 
 
-def _sinusoid_at(pos: jax.Array, d: int, dtype) -> jax.Array:
-    """Sinusoidal embedding at absolute position(s): scalar -> (1,1,d)
-    broadcastable, (B,) vector -> (B,1,d) per-slot."""
+def make_prefill_body(cfg: ArchConfig, kinds: list[str],
+                      positions: jax.Array, lengths: jax.Array,
+                      valid: jax.Array):
+    """One chunked-prefill block: the scan body of ``prefill_step`` —
+    the multi-token sibling of :func:`make_decode_body`.  Attention
+    advances the chunk through :func:`attn.decode_attention_chunked`
+    (chunk-wide KV scatter, chunk-causal masking), SSM/hybrid state
+    steps the chunk via scan, the enc-dec cross path is unchanged
+    (already chunk-shape agnostic)."""
 
-    pos = jnp.atleast_1d(jnp.asarray(pos, jnp.float32))         # (B,)
-    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
-    ang = pos[:, None] / jnp.power(10000.0, 2 * dim / d)        # (B, d/2)
+    def body(carry, scanned):
+        h = carry
+        if cfg.is_encdec:
+            bp, cache, xp, xkv = scanned
+        else:
+            bp, cache = scanned
+        new_cache = {}
+        for i, kind in enumerate(kinds):
+            key = f"{i}_{kind}"
+            p, c = bp[key], cache[key]
+            nc: dict[str, Any] = {}
+            hn = rms_norm(h, p["ln1"])
+            if kind in ("dense", "moe", "encoder"):
+                a, nc["kv"] = attn.decode_attention_chunked(
+                    p["attn"], cfg, hn, c["kv"], positions, lengths,
+                    window=cfg.window)
+                h = h + a
+            elif kind == "hybrid":
+                a, nc["kv"] = attn.decode_attention_chunked(
+                    p["attn"], cfg, hn, c["kv"], positions, lengths,
+                    window=cfg.window)
+                m, nc["ssm"] = ssm_mod.ssm_prefill_step(
+                    p["ssm"], cfg, hn, c["ssm"], valid)
+                h = h + p["mix"][0] * a + p["mix"][1] * m
+            elif kind == "ssm":
+                m, nc["ssm"] = ssm_mod.ssm_prefill_step(
+                    p["ssm"], cfg, hn, c["ssm"], valid)
+                h = h + m
+            elif kind == "cross":
+                a = attn.decode_cross_attention(p["xattn"], cfg, hn,
+                                                c["enc_kv"])
+                h = h + jnp.tanh(p["gate"]).astype(h.dtype) * a
+                nc["enc_kv"] = c["enc_kv"]
+            if "ffn" in p:
+                h2 = rms_norm(h, p["ln2"])
+                if kind == "moe":
+                    h = h + moe_mod.moe_forward(p["ffn"], cfg, h2)
+                else:
+                    h = h + mlp_forward(p["ffn"], cfg, h2)
+            new_cache[key] = nc
+        if cfg.is_encdec:
+            a = attn.decode_cross_attention(
+                xp["x"], cfg, rms_norm(h, xp["ln_x"]), xkv)
+            h = h + a
+        return h, new_cache
+
+    return body
+
+
+def _sinusoid_at(pos: jax.Array, d: int, dtype) -> jax.Array:
+    """Sinusoidal embedding at absolute position(s): (...,) positions
+    -> (..., d); callers shape the position grid ((B, 1) per-slot
+    decode, (B, T) chunked prefill)."""
+
+    pos = jnp.asarray(pos, jnp.float32)
+    dim = jnp.arange(d // 2, dtype=jnp.float32)
+    ang = pos[..., None] / jnp.power(10000.0, 2 * dim / d)   # (..., d/2)
     return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1
-                           ).astype(dtype)[:, None, :]
+                           ).astype(dtype)
 
 
 def build_model(cfg: ArchConfig) -> ModelAPI:

@@ -1,5 +1,6 @@
 """GQA attention: qk-norm / qkv-bias / sliding-window / RoPE variants,
-full-sequence (train / prefill) and single-token cached decode paths.
+full-sequence (train / prefill), single-token cached decode, and
+chunked cached prefill (multi-token serving steps) paths.
 
 Pure-JAX math by default (XLA fuses this well on TPU); the Pallas flash
 kernel (`repro.kernels.flash_attention`) is the opt-in runtime path via
@@ -269,6 +270,92 @@ def decode_attention(p: dict, cfg: ArchConfig, x: jax.Array, cache: dict,
     return lc(out, "batch", "seq", "embed"), new_cache
 
 
+def decode_attention_chunked(p: dict, cfg: ArchConfig, x: jax.Array,
+                             cache: dict, cur_len: jax.Array,
+                             lengths: jax.Array, *,
+                             window: int | None = None
+                             ) -> tuple[jax.Array, dict]:
+    """Chunked cached prefill: advance T tokens against the decode cache
+    in one call (the multi-token sibling of :func:`decode_attention`).
+
+    x: (B, T, d); cache["k"/"v"]: (B, Hkv, C, hd); cur_len: (B,) tokens
+    already in each slot's cache; lengths: (B,) valid tokens of this
+    chunk per slot (rows past a slot's length are padding — they neither
+    read into the cache nor write it, so mixed prefill/decode serving
+    slots share one static-shape step).
+
+    Queries attend to the *pre-chunk* cache snapshot concatenated with
+    the in-chunk keys under a chunk-causal mask (the ``_sdpa_qchunked``
+    offset-position discipline: masks come from absolute positions, not
+    0-based contiguity).  Attending the snapshot rather than the updated
+    ring is load-bearing for SWA: with a ring of C slots and a chunk
+    longer than C, a late in-chunk token overwrites the ring slot an
+    early query still needs.  The returned cache has the valid chunk K/V
+    scattered in ring order, last writer per slot winning."""
+
+    B, T, d = x.shape
+    C = cache["k"].shape[2]
+    cur_len = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32), (B,))
+    lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (B,))
+    t_idx = jnp.arange(T, dtype=jnp.int32)
+    pos = cur_len[:, None] + t_idx[None, :]            # (B, T) absolute
+    valid = t_idx[None, :] < lengths[:, None]          # (B, T)
+
+    q, k_new, v_new = _project_qkv(p, cfg, x, x)
+    if cfg.use_rope:
+        q = rope(q, pos, cfg.rope_theta)
+        k_new = rope(k_new, pos, cfg.rope_theta)
+
+    # ring scatter: chunk token t lands in slot pos[t] mod C; for each
+    # ring index take the LAST valid writer (one-hot + argmax keeps the
+    # update elementwise — same sharding rationale as decode_attention)
+    ring = jnp.mod(pos, C)                             # (B, T)
+    match = (ring[:, :, None] == jnp.arange(C)[None, None, :]) \
+        & valid[:, :, None]                            # (B, T, C)
+    hit = match.any(axis=1)                            # (B, C)
+    last_t = jnp.argmax(match * (t_idx[None, :, None] + 1), axis=1)
+
+    def scatter(new, old):
+        vals = jnp.take_along_axis(new, last_t[:, None, :, None], axis=2)
+        return jnp.where(hit[:, None, :, None], vals.astype(old.dtype), old)
+
+    new_cache = {"k": scatter(k_new, cache["k"]),
+                 "v": scatter(v_new, cache["v"])}
+
+    # pre-chunk snapshot key positions: ring index i last held absolute
+    # position (cur_len-1) - ((slot_last - i) mod C); never-written
+    # indices come out negative and mask off
+    last = cur_len - 1
+    slot_last = jnp.mod(last, C)
+    idx = jnp.arange(C, dtype=jnp.int32)[None, :]      # (1, C)
+    abs_old = last[:, None] - jnp.mod(slot_last[:, None] - idx, C)
+
+    kp = jnp.concatenate([abs_old, pos], axis=1)       # (B, C+T)
+    k_ok = jnp.concatenate([abs_old >= 0, valid], axis=1)
+    qp = pos[:, :, None]                               # (B, T, 1)
+    mask = k_ok[:, None, :] & (kp[:, None, :] <= qp)   # (B, T, C+T)
+    if window is not None:
+        mask &= kp[:, None, :] >= qp - window + 1
+    mask = mask[:, None, None, :, :]                   # (B, 1, 1, T, C+T)
+
+    # grouped GQA over snapshot-cache + in-chunk keys (no head repeat)
+    k_all = jnp.concatenate([cache["k"].astype(jnp.float32),
+                             k_new.astype(jnp.float32)], axis=2)
+    v_all = jnp.concatenate([cache["v"].astype(jnp.float32),
+                             v_new.astype(jnp.float32)], axis=2)
+    B2, H, T2, hd = q.shape
+    Hkv = k_all.shape[1]
+    g = H // Hkv
+    qg = q.reshape(B2, Hkv, g, T, hd).astype(jnp.float32) * cfg.hd ** -0.5
+    s = jnp.einsum("bkgtd,bksd->bkgts", qg, k_all)
+    s = jnp.where(mask, s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    og = jnp.einsum("bkgts,bksd->bkgtd", pr, v_all)
+    o = og.reshape(B2, H, T, hd).astype(x.dtype)
+    out = jnp.einsum("bhsk,hkd->bsd", o, p["wo"])
+    return lc(out, "batch", "seq", "embed"), new_cache
+
+
 def decode_cross_attention(p: dict, cfg: ArchConfig, x: jax.Array,
                            enc_kv: dict) -> jax.Array:
     """Decode-time cross attention against precomputed encoder K/V."""
@@ -283,5 +370,6 @@ def decode_cross_attention(p: dict, cfg: ArchConfig, x: jax.Array,
     return jnp.einsum("bhsk,hkd->bsd", o, p["wo"])
 
 
-__all__ = ["attn_specs", "attention", "decode_attention", "kv_cache_specs",
+__all__ = ["attn_specs", "attention", "decode_attention",
+           "decode_attention_chunked", "kv_cache_specs",
            "decode_cross_attention"]

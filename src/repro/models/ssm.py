@@ -207,5 +207,31 @@ def ssm_decode_step(p: dict, cfg: ArchConfig, x: jax.Array, state: dict
     return out, {"h": h, "conv": new_conv}
 
 
+def ssm_prefill_step(p: dict, cfg: ArchConfig, x: jax.Array, state: dict,
+                     valid: jax.Array) -> tuple[jax.Array, dict]:
+    """Advance a chunk of T tokens through the decode-state recurrence:
+    a ``lax.scan`` of :func:`ssm_decode_step` over the chunk dimension.
+
+    x: (B, T, d); valid: (B, T) — padding tokens (rows past a serving
+    slot's remaining prompt) must be inert, so the per-token state
+    update is gated: an invalid token leaves (h, conv) untouched.
+    Returns (y (B, T, d), new state)."""
+
+    B, T, d = x.shape
+
+    def body(st, inp):
+        xt, vt = inp                                    # (B, d), (B,)
+        y, st_new = ssm_decode_step(p, cfg, xt[:, None, :], st)
+        gated = jax.tree.map(
+            lambda new, old: jnp.where(
+                vt.reshape((B,) + (1,) * (new.ndim - 1)), new, old),
+            st_new, st)
+        return gated, y[:, 0]
+
+    st, ys = jax.lax.scan(body, state,
+                          (x.swapaxes(0, 1), valid.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1), st
+
+
 __all__ = ["ssm_specs", "ssm_forward", "ssm_state_specs", "ssm_decode_step",
-           "ssd_chunked"]
+           "ssm_prefill_step", "ssd_chunked"]

@@ -1,13 +1,15 @@
 """Runtime: train step builder, fault-tolerant supervisor, serving."""
 
 from .loop import History, LoopConfig, SimulatedFailure, run_training
-from .serve import (DecodeBatchTunable, Request, Server, choose_batch,
-                    decode_batch_tunable)
+from .serve import (DecodeBatchTunable, PrefillChunkTunable, Request,
+                    Server, choose_batch, choose_prefill_chunk,
+                    decode_batch_tunable, prefill_chunk_tunable)
 from .train import (TrainConfig, TrainState, abstract_train_state,
                     build_train_step, init_train_state)
 
 __all__ = ["History", "LoopConfig", "SimulatedFailure", "run_training",
-           "Request", "Server", "DecodeBatchTunable", "choose_batch",
-           "decode_batch_tunable",
+           "Request", "Server", "DecodeBatchTunable", "PrefillChunkTunable",
+           "choose_batch", "choose_prefill_chunk",
+           "decode_batch_tunable", "prefill_chunk_tunable",
            "TrainConfig", "TrainState", "abstract_train_state",
            "build_train_step", "init_train_state"]

@@ -1,14 +1,22 @@
-"""Batched serving runtime: fixed-slot continuous batching.
+"""Batched serving runtime: fixed-slot continuous batching with
+chunked prefill.
 
 ``Server`` keeps ``batch`` decode slots alive; requests are admitted
-into free slots, every engine tick advances *all* active slots by one
-token through the (jitted) ``decode_step``, finished requests retire and
-free their slot.  This is continuous batching in its TPU-friendly form:
-static shapes (slot count and cache length fixed), per-slot state packed
-in the same pytree the dry-run's serve_step lowers.
+into free slots, finished requests retire and free their slot.  Each
+slot has a *phase*: **prefill** (prompt tokens still unconsumed) or
+**decode** (generating).  An engine tick advances prefilling slots by
+one ``prefill_chunk``-token jitted ``prefill_step`` and decoding slots
+by the one-token jitted ``decode_step`` — a long prompt costs
+``ceil(len/chunk)`` ticks instead of ``len``, amortizing the per-tick
+weight stream chunk-wide.  This is continuous batching in its
+TPU-friendly form: static shapes (slot count, chunk size and cache
+length fixed), per-slot state packed in the same pytree the dry-run's
+serve_step lowers.
 
 Greedy sampling; per-slot absolute positions drive RoPE/ring caches, so
-mixed-progress slots coexist in one batch.
+mixed-progress (and mixed-phase) slots coexist in one batch.  Both
+steps gate their state writes per slot, so a prefill tick cannot
+corrupt a decoding neighbour and vice versa.
 """
 
 from __future__ import annotations
@@ -22,7 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.search_space import Param, SearchSpace
-from ..core.tpu_machine import HBM_BW
+from ..core.tpu_machine import HBM_BW, PEAK_FLOPS
 from ..models.api import ModelAPI
 
 
@@ -36,25 +44,45 @@ class Request:
 
 
 class Server:
-    def __init__(self, api: ModelAPI, params, *, batch: int, context: int):
+    def __init__(self, api: ModelAPI, params, *, batch: int, context: int,
+                 prefill_chunk: int = 32):
         self.api = api
         self.params = params
         self.batch = batch
         self.context = context
+        self.prefill_chunk = max(1, min(prefill_chunk, context))
         self.state = api.init_decode_state(batch, context)
         self.slot_req: list[Request | None] = [None] * batch
         self.slot_pos = np.zeros(batch, np.int32)   # per-slot token count
+        self._slot_dirty = np.zeros(batch, bool)    # retired -> stale state
         self.queue: list[Request] = []
         self.completed: list[Request] = []
 
         # jitted one-token step over the whole slot batch; positions is
         # the (batch,) per-slot position vector — decode_step threads it
         # through RoPE, the ring-cache slot, and the validity mask, so
-        # mixed-progress slots coexist correctly in one batch
-        def step(params, state, tokens, positions):
-            return api.decode_step(params, state, tokens, positions)
+        # mixed-progress slots coexist correctly in one batch.  ``active``
+        # gates the state merge per slot: slots mid-prefill (or idle)
+        # must not have a garbage token scattered into their KV ring or
+        # folded into their SSM recurrence.
+        def step(params, state, tokens, positions, active):
+            logits, new_state = api.decode_step(params, state, tokens,
+                                                positions)
+            def sel(new, old):
+                m = active.reshape((1, active.shape[0])
+                                   + (1,) * (new.ndim - 2))
+                return jnp.where(m, new, old)
+            return logits, jax.tree.map(sel, new_state, state)
+
+        # jitted chunked-prefill step: per-slot chunk lengths gate every
+        # state write inside the model (KV scatter, SSM scan), so one
+        # static-shape call serves any mix of prefilling/other slots
+        def pstep(params, state, tokens, positions, lengths):
+            return api.prefill_step(params, state, tokens, positions,
+                                    lengths)
 
         self._step = jax.jit(step)
+        self._prefill_step = jax.jit(pstep)
 
     # -- API ----------------------------------------------------------------
     def submit(self, prompt: list[int], max_new: int,
@@ -63,9 +91,21 @@ class Server:
         for this request; the encoder runs at admission and its cross-K/V
         fills the request's slot (serving-side prefill)."""
 
+        prompt = list(prompt)
+        if not prompt:
+            raise ValueError("empty prompt: a request needs at least one "
+                             "prompt token")
+        if max_new < 1:
+            raise ValueError(f"max_new must be >= 1, got {max_new}")
+        limit = self.context - max_new
+        if len(prompt) > limit:
+            raise ValueError(
+                f"prompt of {len(prompt)} tokens + max_new={max_new} "
+                f"exceeds context={self.context}; prompts may be at most "
+                f"context - max_new = {limit} tokens")
         req = Request(rid=len(self.completed) + len(self.queue) +
                       sum(r is not None for r in self.slot_req),
-                      prompt=list(prompt), max_new=max_new)
+                      prompt=prompt, max_new=max_new)
         req._frames = frames  # type: ignore[attr-defined]
         self.queue.append(req)
         return req
@@ -77,6 +117,9 @@ class Server:
                 self.slot_req[slot] = req
                 self.slot_pos[slot] = 0
                 req._cursor = 0  # type: ignore[attr-defined]
+                if self._slot_dirty[slot]:
+                    self._reset_recurrent_state(slot)
+                    self._slot_dirty[slot] = False
                 frames = getattr(req, "_frames", None)
                 if self.api.cfg.is_encdec and frames is not None:
                     kv = self.api.encode_cross_kv(
@@ -87,36 +130,93 @@ class Server:
                     self.state["xattn"]["v"] = xv.at[:, slot].set(
                         kv["v"][:, 0].astype(xv.dtype))
 
+    def _reset_recurrent_state(self, slot: int) -> None:
+        """Zero a reused slot's SSM/conv state: position masking hides
+        stale KV-ring entries, but the recurrence has no position — a
+        new request must not start from the previous one's hidden
+        state.  Only the recurrent leaves are touched (dense archs pay
+        nothing; KV rings stay as they are)."""
+
+        blocks = dict(self.state["blocks"])
+        for key, entry in blocks.items():
+            if "ssm" in entry:
+                entry = dict(entry)
+                entry["ssm"] = jax.tree.map(
+                    lambda a: a.at[:, slot].set(0), entry["ssm"])
+                blocks[key] = entry
+        self.state = {**self.state, "blocks": blocks}
+
+    def _phase(self, slot: int) -> str:
+        req = self.slot_req[slot]
+        cur = req._cursor  # type: ignore[attr-defined]
+        return "prefill" if cur < len(req.prompt) else "decode"
+
+    def _retire_if_done(self, slot: int) -> None:
+        req = self.slot_req[slot]
+        if len(req.out) >= req.max_new or \
+                self.slot_pos[slot] >= self.context - 1:
+            req.done = True
+            self.completed.append(req)
+            self.slot_req[slot] = None
+            self._slot_dirty[slot] = True
+
     def tick(self) -> int:
-        """One engine iteration; returns number of active slots."""
+        """One engine iteration; returns number of active slots.
+
+        Decoding slots advance one token through ``decode_step``;
+        prefilling slots advance up to ``prefill_chunk`` prompt tokens
+        through ``prefill_step`` — the chunk that consumes a prompt's
+        last token also yields the request's first generated token,
+        exactly as the tokenwise tick that fed the last prompt token
+        did."""
 
         self._admit()
         active = [s for s in range(self.batch) if self.slot_req[s] is not None]
         if not active:
             return 0
-        tokens = np.zeros((self.batch, 1), np.int32)
-        for s in active:
-            req = self.slot_req[s]
-            cur = req._cursor  # type: ignore[attr-defined]
-            if cur < len(req.prompt):
-                tokens[s, 0] = req.prompt[cur]       # prompt consumption
-            else:
-                tokens[s, 0] = req.out[-1] if req.out else 0
-        logits, self.state = self._step(self.params, self.state,
-                                        jnp.asarray(tokens),
-                                        jnp.asarray(self.slot_pos))
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
-        for s in active:
-            req = self.slot_req[s]
-            req._cursor += 1  # type: ignore[attr-defined]
-            self.slot_pos[s] += 1
-            if req._cursor >= len(req.prompt):  # type: ignore[attr-defined]
+        decode = [s for s in active if self._phase(s) == "decode"]
+        prefill = [s for s in active if self._phase(s) == "prefill"]
+
+        if decode:
+            tokens = np.zeros((self.batch, 1), np.int32)
+            mask = np.zeros(self.batch, bool)
+            for s in decode:
+                tokens[s, 0] = self.slot_req[s].out[-1]
+                mask[s] = True
+            logits, self.state = self._step(self.params, self.state,
+                                            jnp.asarray(tokens),
+                                            jnp.asarray(self.slot_pos),
+                                            jnp.asarray(mask))
+            nxt = np.asarray(jnp.argmax(logits, axis=-1))
+            for s in decode:
+                req = self.slot_req[s]
+                req._cursor += 1  # type: ignore[attr-defined]
+                self.slot_pos[s] += 1
                 req.out.append(int(nxt[s]))
-                if len(req.out) >= req.max_new or \
-                        self.slot_pos[s] >= self.context - 1:
-                    req.done = True
-                    self.completed.append(req)
-                    self.slot_req[s] = None
+                self._retire_if_done(s)
+
+        if prefill:
+            T = self.prefill_chunk
+            tokens = np.zeros((self.batch, T), np.int32)
+            lengths = np.zeros(self.batch, np.int32)
+            for s in prefill:
+                req = self.slot_req[s]
+                cur = req._cursor  # type: ignore[attr-defined]
+                n = min(T, len(req.prompt) - cur)
+                tokens[s, :n] = req.prompt[cur:cur + n]
+                lengths[s] = n
+            logits, self.state = self._prefill_step(
+                self.params, self.state, jnp.asarray(tokens),
+                jnp.asarray(self.slot_pos), jnp.asarray(lengths))
+            nxt = np.asarray(jnp.argmax(logits, axis=-1))
+            for s in prefill:
+                req = self.slot_req[s]
+                n = int(lengths[s])
+                req._cursor += n  # type: ignore[attr-defined]
+                self.slot_pos[s] += n
+                if req._cursor >= len(req.prompt):
+                    req.out.append(int(nxt[s]))
+                    self._retire_if_done(s)
         return len(active)
 
     def run_until_drained(self, max_ticks: int = 10_000) -> None:
@@ -129,6 +229,23 @@ class Server:
 # ---------------------------------------------------------------------------
 # serving-configuration tuning (repro.tune)
 # ---------------------------------------------------------------------------
+
+
+KV_CACHE_BYTES = 2          # bf16 cache entries
+K_AND_V = 2                 # two tensors per layer
+
+
+def kv_cache_stream_s(batch: int, layers: int, cache_len: int,
+                      kv_width: int) -> float:
+    """Seconds to stream every slot's KV cache once (one engine tick's
+    cache traffic).  GQA caches are ``n_kv_heads * hd`` elements wide —
+    modeling them as ``d_model`` overestimated KV reads by the
+    ``n_heads / n_kv_heads`` grouping ratio and biased slot-count picks
+    low.  Shared by :class:`DecodeBatchTunable` and
+    :class:`PrefillChunkTunable`."""
+
+    return (batch * layers * cache_len * kv_width
+            * K_AND_V * KV_CACHE_BYTES / HBM_BW)
 
 
 @dataclass(frozen=True)
@@ -154,6 +271,9 @@ class DecodeBatchTunable:
     mean_new: int
     max_batch: int = 64
     dispatch_s: float = 50e-6
+    # GQA KV-cache width in elements (n_kv_heads * hd); 0 falls back to
+    # d_model (the pre-fix overestimate) for old call sites
+    kv_width: int = 0
     # hardware-in-the-loop handles: excluded from identity/caching
     api: Any = field(default=None, repr=False, compare=False)
     params: Any = field(default=None, repr=False, compare=False)
@@ -173,7 +293,8 @@ class DecodeBatchTunable:
 
         b = cfg["batch"]
         weight_s = self.param_bytes / HBM_BW
-        kv_s = b * self.layers * self.context * self.d_model * 2 * 2 / HBM_BW
+        kv_s = kv_cache_stream_s(b, self.layers, self.context,
+                                 self.kv_width or self.d_model)
         tick_s = weight_s + kv_s + self.dispatch_s
         waves = -(-self.requests // b)
         return waves * self.mean_new * tick_s * 1e6
@@ -218,6 +339,7 @@ def decode_batch_tunable(api: ModelAPI, *, context: int, requests: int,
                               layers=api.cfg.n_layers,
                               d_model=api.cfg.d_model, context=context,
                               requests=requests, mean_new=max_new,
+                              kv_width=api.cfg.n_kv_heads * api.cfg.hd,
                               api=api, params=params)
 
 
@@ -238,5 +360,153 @@ def choose_batch(api: ModelAPI, *, context: int, requests: int,
     return int(res.best_config["batch"]), res
 
 
-__all__ = ["Server", "Request", "DecodeBatchTunable",
-           "decode_batch_tunable", "choose_batch"]
+@dataclass(frozen=True)
+class PrefillChunkTunable:
+    """``repro.tune`` Tunable: tokens per chunked-prefill tick
+    (``Server(prefill_chunk=...)``).
+
+    Chunked prefill amortizes the per-tick weight stream over ``chunk``
+    prompt tokens, so a prompt costs ``ceil(len/chunk)`` ticks instead
+    of ``len`` — but each tick spends chunk-linear matmul FLOPs and a
+    chunk-quadratic attention-score term, so the optimum is a genuine
+    tradeoff, not "as big as possible".  ``cost`` models the drain of
+    the expected long-prompt load (``requests`` prompts of
+    ``prompt_len`` tokens + ``mean_new`` decode steps each) in
+    microseconds; with ``api``/``params`` attached, ``measure(cfg)``
+    drains a real :class:`Server` at that chunk size so
+    ``engine="measure"`` can return the wall-clock winner."""
+
+    param_bytes: int
+    layers: int
+    d_model: int
+    kv_width: int               # GQA cache width, n_kv_heads * hd
+    context: int
+    prompt_len: int
+    requests: int
+    mean_new: int
+    batch: int = 4
+    max_chunk: int = 256
+    dispatch_s: float = 50e-6
+    # hardware-in-the-loop handles: excluded from identity/caching
+    api: Any = field(default=None, repr=False, compare=False)
+    params: Any = field(default=None, repr=False, compare=False)
+    name: ClassVar[str] = "serve.prefill_chunk"
+
+    def space(self) -> SearchSpace:
+        sizes = []
+        c = 1
+        cap = min(self.max_chunk, self.context)
+        while c <= cap:
+            sizes.append(c)
+            if c >= self.prompt_len:    # larger chunks cannot help
+                break
+            c *= 2
+        return SearchSpace(params=[Param("chunk", tuple(sizes))])
+
+    def cost(self, cfg: Mapping[str, Any]) -> float:
+        """Modeled microseconds to drain the load (same unit as
+        ``measure``): per prefill tick, one weight stream (amortized
+        over the chunk — the term chunking exists to shrink), one KV
+        stream (GQA width, shared with :class:`DecodeBatchTunable`),
+        chunk-linear matmul FLOPs, and a chunk-quadratic score/HBM term;
+        decode ticks follow the decode-batch model."""
+
+        chunk = cfg["chunk"]
+        n_params = self.param_bytes / 2            # bf16 weights
+        weight_s = self.param_bytes / HBM_BW
+        kv_s = kv_cache_stream_s(self.batch, self.layers, self.context,
+                                 self.kv_width)
+        flops_s = 2 * n_params * chunk * self.batch / PEAK_FLOPS
+        score_s = (self.batch * self.layers * chunk
+                   * (self.context + chunk) * 4 / HBM_BW)
+        prefill_tick_s = (weight_s + kv_s + flops_s + score_s
+                          + self.dispatch_s)
+        decode_tick_s = (weight_s + kv_s
+                         + 2 * n_params * self.batch / PEAK_FLOPS
+                         + self.dispatch_s)
+        prefill_ticks = -(-self.prompt_len // chunk)
+        waves = -(-self.requests // self.batch)
+        return waves * (prefill_ticks * prefill_tick_s
+                        + self.mean_new * decode_tick_s) * 1e6
+
+    def measure(self, cfg: Mapping[str, Any], *, warmup: int = 1,
+                iters: int = 1) -> float:
+        """Wall-clock microseconds to drain the long-prompt load through
+        a real :class:`Server` at this chunk size."""
+
+        if self.api is None or self.params is None:
+            raise RuntimeError(
+                "PrefillChunkTunable.measure needs the model attached: "
+                "construct with api=/params= "
+                "(choose_prefill_chunk(..., params=...))")
+        if self.prompt_len > self.context - self.mean_new:
+            # silently clamping here would measure a different load than
+            # cost() models and the cache fingerprint claims
+            raise ValueError(
+                f"prompt_len={self.prompt_len} + mean_new={self.mean_new} "
+                f"exceeds context={self.context}; size the tunable to the "
+                f"load it will actually serve (prefill_chunk_tunable "
+                f"clamps for you)")
+        from ..kernels.common import time_fn
+        vocab = self.api.cfg.vocab
+
+        def drain() -> None:
+            srv = Server(self.api, self.params, batch=self.batch,
+                         context=self.context,
+                         prefill_chunk=int(cfg["chunk"]))
+            for _ in range(self.requests):
+                srv.submit([i % (vocab - 1) + 1
+                            for i in range(self.prompt_len)],
+                           max_new=self.mean_new)
+            srv.run_until_drained()
+
+        return time_fn(drain, warmup=warmup, iters=iters)
+
+    def fingerprint(self) -> dict[str, Any]:
+        fp = {f.name: getattr(self, f.name)
+              for f in dataclasses.fields(self) if f.compare}
+        return {"tunable": self.name, "unit": "us", **fp}
+
+
+def prefill_chunk_tunable(api: ModelAPI, *, context: int, prompt_len: int,
+                          requests: int, max_new: int, batch: int,
+                          max_chunk: int = 256,
+                          params=None) -> PrefillChunkTunable:
+    """The chunked-prefill tunable for this model + expected load — the
+    one place the sizing wiring lives (library ``choose_prefill_chunk``
+    and the ``launch/serve --tune-prefill`` CLI both build through
+    here)."""
+
+    # clamp UP FRONT so cost(), measure() and the cache fingerprint all
+    # describe the same load
+    prompt_len = max(1, min(prompt_len, context - max_new))
+    return PrefillChunkTunable(param_bytes=api.param_count() * 2,
+                               layers=api.cfg.n_layers,
+                               d_model=api.cfg.d_model,
+                               kv_width=api.cfg.n_kv_heads * api.cfg.hd,
+                               context=context, prompt_len=prompt_len,
+                               requests=requests, mean_new=max_new,
+                               batch=batch, max_chunk=max_chunk,
+                               api=api, params=params)
+
+
+def choose_prefill_chunk(api: ModelAPI, *, context: int, prompt_len: int,
+                         requests: int, max_new: int, batch: int,
+                         cache="default", params=None,
+                         engine: str = "grid", **tune_kw):
+    """Pick ``Server``'s ``prefill_chunk`` via ``repro.tune``; returns
+    ``(chunk, TuneResult)``.  ``engine="measure"`` (requires ``params``)
+    shortlists chunk sizes through the drain-time model, then times real
+    long-prompt server drains and returns the wall-clock winner."""
+
+    from ..tune import tune as _tune
+    tb = prefill_chunk_tunable(api, context=context, prompt_len=prompt_len,
+                               requests=requests, max_new=max_new,
+                               batch=batch, params=params)
+    res = _tune(tb, engine=engine, cache=cache, **tune_kw)
+    return int(res.best_config["chunk"]), res
+
+
+__all__ = ["Server", "Request", "DecodeBatchTunable", "PrefillChunkTunable",
+           "decode_batch_tunable", "prefill_chunk_tunable", "choose_batch",
+           "choose_prefill_chunk", "kv_cache_stream_s"]

@@ -37,6 +37,7 @@ from ..core import bisect_search, explorer, platform, properties, swarm, sweep
 from ..core.autotuner import TuneResult
 from ..core.counterexample import Counterexample
 from ..core.wave_model import model_time
+from ..kernels.common import median
 
 
 class EngineError(ValueError):
@@ -271,9 +272,11 @@ class MeasureEngine(Engine):
             for rep in range(max(1, repeats)):
                 kw = {"warmup": 0} if (rep and warmup_aware) else {}
                 times.append(float(measure(cfg, **kw)))
+            # true median (even repeats average the middle pair —
+            # sorted[n//2] returned the WORSE of two samples)
             times.sort()
             candidates.append({"config": cfg, "modeled": modeled,
-                               "measured": times[len(times) // 2],
+                               "measured": median(times),
                                "samples": times})
         best = min(candidates, key=lambda c: c["measured"])
         modeled_pick = candidates[0]            # scored[0] = model's argmin

@@ -107,12 +107,13 @@ def _ensure_builtin_factories() -> None:
     from ..kernels.matmul_tuned.ops import MatmulTunable
     from ..kernels.sweep_eval.ops import SweepEvalTunable
     from ..kernels.tuned_reduction.ops import ReductionTunable
-    from ..runtime.serve import DecodeBatchTunable
+    from ..runtime.serve import DecodeBatchTunable, PrefillChunkTunable
     _FACTORIES.setdefault("kernels.matmul_tuned", MatmulTunable)
     _FACTORIES.setdefault("kernels.flash_attention", FlashAttentionTunable)
     _FACTORIES.setdefault("kernels.tuned_reduction", ReductionTunable)
     _FACTORIES.setdefault("kernels.sweep_eval", SweepEvalTunable)
     _FACTORIES.setdefault("serve.decode_batch", DecodeBatchTunable)
+    _FACTORIES.setdefault("serve.prefill_chunk", PrefillChunkTunable)
     _FACTORIES.setdefault("platform", _platform_factory)
     _FACTORIES.setdefault("tpu.distributed", _tpu_distributed_factory)
     _FACTORIES.setdefault("meta.engine", _meta_engine_factory)

@@ -161,3 +161,82 @@ def test_decode_attention_per_slot_positions_match_scalar():
         for key in ("k", "v"):
             np.testing.assert_array_equal(np.asarray(cache_vec[key][b]),
                                           np.asarray(cache_b[key][0]))
+
+
+# ---------------------------------------------------------------------------
+# chunked cached prefill
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("window,C", [(None, 32), (8, 8)])
+def test_decode_attention_chunked_matches_sequential(window, C):
+    """One chunked call over T tokens must produce the same outputs and
+    final cache as T sequential decode_attention steps — including the
+    SWA ring case where the chunk (12) exceeds the ring (C=8), so
+    in-chunk tokens overwrite slots earlier queries still need."""
+
+    cfg, p, _, _ = _setup()
+    B, T = 2, 12
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.standard_normal((B, T, cfg.d_model)) * 0.3,
+                    jnp.float32)
+    zero = {
+        "k": jnp.zeros((B, cfg.n_kv_heads, C, cfg.hd), jnp.float32),
+        "v": jnp.zeros((B, cfg.n_kv_heads, C, cfg.hd), jnp.float32),
+    }
+    cur = jnp.asarray([0, 3], jnp.int32)        # mixed-progress slots
+    lengths = jnp.asarray([T, T], jnp.int32)
+
+    out_c, cache_c = A.decode_attention_chunked(p, cfg, x, zero, cur,
+                                                lengths, window=window)
+
+    cache_s = {k: v for k, v in zero.items()}
+    outs = []
+    for t in range(T):
+        o, cache_s = A.decode_attention(p, cfg, x[:, t:t + 1], cache_s,
+                                        cur + t, window=window)
+        outs.append(o)
+    out_s = jnp.concatenate(outs, axis=1)
+
+    np.testing.assert_allclose(np.asarray(out_c), np.asarray(out_s),
+                               rtol=2e-5, atol=2e-5)
+    for key in ("k", "v"):
+        np.testing.assert_allclose(np.asarray(cache_c[key]),
+                                   np.asarray(cache_s[key]),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_chunked_length_gating():
+    """Rows past a slot's chunk length are padding: they must not write
+    the cache, and a zero-length slot's cache must be untouched."""
+
+    cfg, p, _, _ = _setup()
+    B, T, C = 2, 8, 16
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(rng.standard_normal((B, T, cfg.d_model)) * 0.3,
+                    jnp.float32)
+    cache = {
+        "k": jnp.asarray(rng.standard_normal(
+            (B, cfg.n_kv_heads, C, cfg.hd)) * 0.3, jnp.float32),
+        "v": jnp.asarray(rng.standard_normal(
+            (B, cfg.n_kv_heads, C, cfg.hd)) * 0.3, jnp.float32),
+    }
+    cur = jnp.asarray([2, 5], jnp.int32)
+    lengths = jnp.asarray([3, 0], jnp.int32)    # slot 1 inert
+
+    out, new_cache = A.decode_attention_chunked(p, cfg, x, cache, cur,
+                                                lengths)
+    for key in ("k", "v"):
+        got = np.asarray(new_cache[key])
+        ref = np.asarray(cache[key])
+        # slot 0: exactly positions 2..4 rewritten, everything else kept
+        changed = np.any(got[0] != ref[0], axis=(0, 2))
+        np.testing.assert_array_equal(changed.nonzero()[0], [2, 3, 4])
+        # slot 1 (length 0): bit-identical cache
+        np.testing.assert_array_equal(got[1], ref[1])
+
+    # the valid prefix must equal the same tokens chunked at full length
+    out3, _ = A.decode_attention_chunked(p, cfg, x[:1, :3],
+                                         {k: v[:1] for k, v in cache.items()},
+                                         cur[:1], jnp.asarray([3], jnp.int32))
+    np.testing.assert_allclose(np.asarray(out[0, :3]), np.asarray(out3[0]),
+                               rtol=2e-5, atol=2e-5)

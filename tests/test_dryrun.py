@@ -145,6 +145,44 @@ def test_lower_cell_skips_long500k_for_full_attention():
 
 
 # ---------------------------------------------------------------------------
+# input specs (the dry-run contract)
+# ---------------------------------------------------------------------------
+
+def test_input_specs_decode_emits_per_slot_position_vector():
+    """The server feeds a (B,) per-slot position vector; a scalar
+    ``cur_len`` spec lowered a *different* decode_step than serving
+    runs (broadcasting folds the vector path away)."""
+
+    from repro.configs import SHAPES, get_config
+    from repro.models import build_model
+
+    api = build_model(get_config("smollm-135m").reduced())
+    shape = SHAPES["decode_32k"].reduced()
+    specs = api.input_specs(shape)
+    B = shape.global_batch
+    assert specs["tokens"].shape == (B, 1)
+    assert specs["cur_len"].shape == (B,)
+
+    chunked = api.input_specs(shape, prefill_chunk=16)
+    assert chunked["tokens"].shape == (B, 16)
+    assert chunked["positions"].shape == (B,)
+    assert chunked["lengths"].shape == (B,)
+    assert "cur_len" not in chunked
+
+    # the specs must lower the steps serving actually jits
+    import jax
+    import jax.numpy as jnp
+    from repro.models.common import abstract_params
+    state = specs["state"]
+    jax.jit(api.decode_step).lower(
+        abstract_params(api.specs), state, specs["tokens"],
+        specs["cur_len"])
+    jax.jit(api.prefill_step).lower(
+        abstract_params(api.specs), state, chunked["tokens"],
+        chunked["positions"], chunked["lengths"])
+
+
+# ---------------------------------------------------------------------------
 # multi-device subprocess (8 host devices, 2x4 mesh)
 # ---------------------------------------------------------------------------
 

@@ -1,5 +1,5 @@
-"""Serving runtime tests: continuous batching, slot reuse, correctness
-against the offline forward pass."""
+"""Serving runtime tests: continuous batching, chunked prefill, slot
+reuse, correctness against the offline forward pass."""
 
 import jax
 import jax.numpy as jnp
@@ -8,15 +8,17 @@ import pytest
 
 from repro.configs import get_config
 from repro.models import build_model
-from repro.runtime.serve import DecodeBatchTunable, Server, choose_batch
+from repro.runtime.serve import (DecodeBatchTunable, PrefillChunkTunable,
+                                 Server, choose_batch, choose_prefill_chunk,
+                                 prefill_chunk_tunable)
 
 
-def make(name="smollm-135m", batch=3, context=32):
+def make(name="smollm-135m", batch=3, context=32, **srv_kw):
     cfg = get_config(name).reduced().replace(logits_dtype="float32")
     api = build_model(cfg)
     params = api.init(jax.random.PRNGKey(0))
     return cfg, api, params, Server(api, params, batch=batch,
-                                    context=context)
+                                    context=context, **srv_kw)
 
 
 def test_server_drains_all_requests():
@@ -111,10 +113,255 @@ def test_server_staggered_admissions_sliding_window():
 
 def test_server_respects_context_limit():
     cfg, api, params, server = make(batch=1, context=16)
-    req = server.submit([1] * 4, max_new=100)   # longer than context
+    req = server.submit([1] * 4, max_new=12)    # exactly fills the context
     server.run_until_drained()
     assert req.done
-    assert len(req.out) < 16
+    assert len(req.out) <= 12
+    assert len(req.prompt) + len(req.out) <= 16
+
+
+def test_submit_rejects_empty_prompt():
+    cfg, api, params, server = make(batch=1, context=16)
+    with pytest.raises(ValueError, match="empty prompt"):
+        server.submit([], max_new=4)
+
+
+def test_submit_rejects_oversized_prompt():
+    """A prompt longer than context - max_new can never fit its
+    generation budget; it must fail loudly at submission, not wedge or
+    silently truncate mid-drain."""
+
+    cfg, api, params, server = make(batch=1, context=16)
+    with pytest.raises(ValueError, match="context - max_new"):
+        server.submit([1] * 13, max_new=4)
+    server.submit([1] * 12, max_new=4)          # boundary case is fine
+    server.run_until_drained()
+
+
+def test_submit_rejects_nonpositive_max_new():
+    cfg, api, params, server = make(batch=1, context=16)
+    with pytest.raises(ValueError, match="max_new"):
+        server.submit([1, 2], max_new=0)
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 32])
+def test_chunked_prefill_matches_tokenwise_and_offline(chunk):
+    """Chunked prefill is an optimization, not a semantics change: any
+    chunk size must reproduce the tokenwise (chunk=1) greedy output,
+    which itself matches the offline full-forward continuation."""
+
+    cfg, api, params, server = make(batch=1, context=32,
+                                    prefill_chunk=chunk)
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab, 20).tolist()
+    req = server.submit(prompt, max_new=4)
+    server.run_until_drained()
+
+    tokenwise = Server(api, params, batch=1, context=32, prefill_chunk=1)
+    ref = tokenwise.submit(prompt, max_new=4)
+    tokenwise.run_until_drained()
+    assert req.out == ref.out
+
+    toks = list(prompt)
+    for _ in range(4):
+        logits = api.forward(params, {"tokens": jnp.asarray([toks],
+                                                            jnp.int32)})
+        toks.append(int(jnp.argmax(logits[0, -1])))
+    assert req.out == toks[len(prompt):]
+
+
+def test_chunked_prefill_fewer_ticks():
+    cfg, api, params, server = make(batch=1, context=32, prefill_chunk=8)
+    req = server.submit(list(range(1, 17)), max_new=2)
+    ticks = 0
+    while not req.done:
+        server.tick()
+        ticks += 1
+    # 2 prefill ticks (16/8; the second yields the first output token)
+    # + 1 decode tick, vs 16 + 1 tokenwise
+    assert ticks == 3
+
+
+def test_chunked_prefill_sliding_window_ring():
+    """Chunk larger than the SWA ring (window=8 -> C=8 cache slots,
+    chunk=32): in-chunk tokens overwrite ring slots earlier in-chunk
+    queries still need, so the step must attend the pre-chunk snapshot
+    plus in-chunk keys — not the post-scatter ring."""
+
+    cfg = get_config("smollm-135m").reduced().replace(
+        logits_dtype="float32", window=8)
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(0, cfg.vocab, 20).tolist()
+
+    outs = {}
+    for chunk in (1, 32):
+        srv = Server(api, params, batch=1, context=32, prefill_chunk=chunk)
+        req = srv.submit(prompt, max_new=4)
+        srv.run_until_drained()
+        outs[chunk] = req.out
+    assert outs[32] == outs[1]
+
+
+@pytest.mark.parametrize("arch", ["hymba-1.5b", "mamba2-2.7b"])
+def test_chunked_prefill_ssm_and_hybrid(arch):
+    """SSM/hybrid blocks step the chunk via scan; recurrent state must
+    advance identically to the tokenwise path."""
+
+    cfg = get_config(arch).reduced().replace(logits_dtype="float32")
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(9)
+    prompt = rng.integers(0, cfg.vocab, 14).tolist()
+    outs = {}
+    for chunk in (1, 8):
+        srv = Server(api, params, batch=1, context=32, prefill_chunk=chunk)
+        req = srv.submit(prompt, max_new=3)
+        srv.run_until_drained()
+        outs[chunk] = req.out
+    assert outs[8] == outs[1]
+
+
+def test_slot_reuse_resets_recurrent_state():
+    """A reused slot must not inherit the previous request's SSM state:
+    position masking hides stale KV entries, but the recurrence has no
+    position — the same request served twice through one slot must
+    produce the same output."""
+
+    cfg = get_config("mamba2-2.7b").reduced().replace(
+        logits_dtype="float32")
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    server = Server(api, params, batch=1, context=32, prefill_chunk=8)
+    prompt = list(range(1, 13))
+    r1 = server.submit(prompt, max_new=3)
+    server.run_until_drained()
+    r2 = server.submit(prompt, max_new=3)
+    server.run_until_drained()
+    assert r1.out == r2.out
+
+
+def test_chunked_prefill_staggered_mixed_phases():
+    """A tick with one slot decoding and another mid-prefill: both run
+    (decode step + chunked prefill step in the same tick) and neither
+    corrupts the other — each request matches its solo drain."""
+
+    cfg, api, params, server = make(batch=2, context=32, prefill_chunk=4)
+    rng = np.random.default_rng(11)
+    prompt_a = rng.integers(0, cfg.vocab, 6).tolist()
+    prompt_b = rng.integers(0, cfg.vocab, 17).tolist()
+
+    req_a = server.submit(prompt_a, max_new=5)
+    for _ in range(3):
+        server.tick()            # A: prefill (2 ticks) + 1 decode tick
+    req_b = server.submit(prompt_b, max_new=4)   # B prefills, A decodes
+    server.run_until_drained()
+    assert req_a.done and req_b.done
+
+    for prompt, req in ((prompt_a, req_a), (prompt_b, req_b)):
+        solo = Server(api, params, batch=1, context=32, prefill_chunk=4)
+        ref = solo.submit(prompt, max_new=req.max_new)
+        solo.run_until_drained()
+        assert req.out == ref.out
+
+
+def test_chunked_prefill_staggered_sliding_window():
+    """Mixed phases through ring-buffer caches: per-slot rings and the
+    chunk-wide scatter must not cross-talk."""
+
+    cfg = get_config("smollm-135m").reduced().replace(
+        logits_dtype="float32", window=8)
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    server = Server(api, params, batch=2, context=24, prefill_chunk=4)
+    rng = np.random.default_rng(5)
+    prompt_a = rng.integers(0, cfg.vocab, 10).tolist()   # > window
+    prompt_b = rng.integers(0, cfg.vocab, 13).tolist()
+
+    req_a = server.submit(prompt_a, max_new=3)
+    for _ in range(4):
+        server.tick()
+    req_b = server.submit(prompt_b, max_new=3)
+    server.run_until_drained()
+
+    for prompt, req in ((prompt_a, req_a), (prompt_b, req_b)):
+        solo = Server(api, params, batch=1, context=24, prefill_chunk=4)
+        ref = solo.submit(prompt, max_new=3)
+        solo.run_until_drained()
+        assert req.out == ref.out
+
+
+# ---------------------------------------------------------------------------
+# prefill-chunk tuning
+# ---------------------------------------------------------------------------
+
+
+def test_prefill_chunk_tunable_space_and_cost():
+    tb = PrefillChunkTunable(param_bytes=1 << 20, layers=2, d_model=64,
+                             kv_width=32, context=64, prompt_len=48,
+                             requests=4, mean_new=4, batch=2)
+    chunks = [cfg["chunk"] for cfg in tb.space()]
+    assert chunks == [1, 2, 4, 8, 16, 32, 64]
+    # bigger chunks need strictly fewer prefill ticks; the modeled cost
+    # must reward the amortized weight stream at small-chunk scale
+    assert tb.cost({"chunk": 16}) < tb.cost({"chunk": 1})
+    fp = tb.fingerprint()
+    assert fp["tunable"] == "serve.prefill_chunk"
+    assert fp["kv_width"] == 32 and "api" not in fp
+
+
+def test_prefill_chunk_tunable_measure_requires_model():
+    tb = PrefillChunkTunable(param_bytes=1 << 20, layers=2, d_model=64,
+                             kv_width=32, context=32, prompt_len=16,
+                             requests=2, mean_new=2, batch=1)
+    with pytest.raises(RuntimeError, match="api=/params="):
+        tb.measure({"chunk": 4})
+
+
+def test_choose_prefill_chunk_measure_engine_times_real_drains():
+    """``engine="measure"`` refines the modeled chunk against real
+    long-prompt ``Server`` drains, provenance-tagged."""
+
+    cfg, api, params, _ = make()
+    chunk, res = choose_prefill_chunk(api, context=32, prompt_len=16,
+                                      requests=2, max_new=2, batch=2,
+                                      params=params, engine="measure",
+                                      cache=None, budget=2, repeats=1)
+    assert res.stats["provenance"] == "measured"
+    assert res.t_min > 0.0
+    assert chunk == res.best_config["chunk"]
+    assert res.stats["measured_pick"]["measured"] <= \
+        res.stats["modeled_pick"]["measured"]
+
+
+def test_decode_batch_cost_uses_gqa_kv_width():
+    """The KV-traffic term must scale with the n_kv_heads*hd cache
+    width, not d_model — modeling full-width caches overestimated KV
+    reads by the GQA ratio and biased slot counts low."""
+
+    kw = dict(param_bytes=1 << 24, layers=4, d_model=256, context=1024,
+              requests=64, mean_new=32, dispatch_s=0.0)
+    full = DecodeBatchTunable(**kw, kv_width=256)     # MHA: no grouping
+    gqa = DecodeBatchTunable(**kw, kv_width=64)       # 4x grouped
+    legacy = DecodeBatchTunable(**kw)                 # kv_width=0 fallback
+    for b in (4, 16):
+        assert gqa.cost({"batch": b}) < full.cost({"batch": b})
+        assert legacy.cost({"batch": b}) == full.cost({"batch": b})
+    # kv_width keys the cache entry so stale full-width entries miss
+    assert full.fingerprint()["kv_width"] == 256
+    assert gqa.fingerprint() != full.fingerprint()
+    # cheaper KV traffic tips the drain optimum to MORE slots (or at
+    # minimum never fewer) for the same load
+    from repro.tune import tune
+    b_gqa = tune(gqa, engine="grid", cache=None).best_config["batch"]
+    b_full = tune(full, engine="grid", cache=None).best_config["batch"]
+    assert b_gqa >= b_full
 
 
 def test_choose_batch_measure_engine_times_real_drains():

@@ -365,6 +365,40 @@ def test_measure_engine_median_of_repeats():
     assert res.best_config == {"block": 2} and res.t_min == 0.0
 
 
+def test_measure_engine_true_median_even_repeats():
+    """``times[len // 2]`` picked the upper-middle sample: repeats=2
+    returned the WORSE of the two times.  A true median averages the
+    middle pair."""
+
+    class TwoSample(MeasuredTunable):
+        def measure(self, cfg, **kw):
+            self.measure_calls += 1
+            # per config: samples alternate base and base + 2.0
+            base = float(abs(cfg["block"] - 2))
+            return base if self.measure_calls % 2 else base + 2.0
+
+    t = TwoSample()
+    res = tune(t, engine="measure", cache=None, repeats=2)
+    assert t.measure_calls == 6
+    # block=2: samples {0.0, 2.0} -> median 1.0 (NOT the worse 2.0)
+    assert res.best_config == {"block": 2}
+    assert res.t_min == pytest.approx(1.0)
+
+
+def test_measure_engine_median_odd_repeats_is_middle_sample():
+    class ThreeSample(MeasuredTunable):
+        def measure(self, cfg, **kw):
+            self.measure_calls += 1
+            base = float(abs(cfg["block"] - 2))
+            return base + [0.0, 5.0, 1.0][self.measure_calls % 3]
+
+    t = ThreeSample()
+    res = tune(t, engine="measure", cache=None, repeats=3)
+    # per config the samples are {base, base+5, base+1}: median base+1
+    assert res.best_config == {"block": 2}
+    assert res.t_min == pytest.approx(1.0)
+
+
 def test_measure_engine_requires_measure_method():
     with pytest.raises(EngineError, match="measure"):
         tune(CountingTunable(), engine="measure", cache=None)

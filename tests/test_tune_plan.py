@@ -122,6 +122,46 @@ def test_plan_from_spec_inline_json_and_missing_path(tmp_path):
         TuningPlan.from_spec(str(tmp_path / "nope.json"))
 
 
+def test_prefill_chunk_plan_roundtrip_zero_engine_runs(tmp_path):
+    """Acceptance slice: a measured PrefillChunkTunable entry (tuned
+    with the model attached) is resolvable from a pure-JSON plan spec —
+    the second warmup is a cache hit with ZERO engine runs, because
+    api/params handles are excluded from the fingerprint."""
+
+    import jax
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.runtime.serve import prefill_chunk_tunable
+
+    cfg = get_config("smollm-135m").reduced().replace(
+        logits_dtype="float32")
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    cache = TuningCache(tmp_path / "c.json")
+
+    tb = prefill_chunk_tunable(api, context=24, prompt_len=8, requests=1,
+                               max_new=2, batch=1, params=params)
+    res = tune(tb, engine="measure", cache=cache, budget=1, repeats=1)
+    assert res.stats["provenance"] == "measured"
+    assert res.t_min > 0.0
+
+    spec = {"name": "prefill-warmup", "jobs": [
+        {"tunable": "serve.prefill_chunk",
+         "params": {"param_bytes": api.param_count() * 2,
+                    "layers": cfg.n_layers, "d_model": cfg.d_model,
+                    "kv_width": cfg.n_kv_heads * cfg.hd,
+                    "context": 24, "prompt_len": 8, "requests": 1,
+                    "mean_new": 2, "batch": 1},
+         "engine": "measure",
+         "engine_kwargs": {"budget": 1, "repeats": 1}}]}
+    report = TuningPlan.from_spec(spec).run(cache=cache)
+    assert report.ok and report.counts["hits"] == 1
+    job = report.results[0]
+    assert job.status == "hit"                  # zero engine runs
+    assert job.provenance == "measured"
+    assert job.best_config == dict(res.best_config)
+
+
 def test_build_tunable_unknown_name_lists_registry():
     with pytest.raises(ValueError, match="unknown tunable"):
         build_tunable("does.not.exist")
