@@ -1,0 +1,153 @@
+"""Paged vs contiguous KV cache: occupancy + throughput at EQUAL memory.
+
+The contiguous serving cache reserves ``context`` tokens of KV per slot,
+so a fixed memory budget forces a choice on mixed short/long traffic:
+keep the context long and run few slots (long prompts fit, short ones
+strand the rings — the load **serializes**), or keep many slots with a
+short context (**rejecting** every prompt that outgrows it).  Paged mode
+(:class:`~repro.runtime.serve.Server` ``paged=True``) shares one page
+pool across all slots: the same memory admits the whole mixed load at
+higher concurrency, fragmentation bounded by the page size.
+
+This benchmark drains the same alternating short/long workload through
+all three configurations at the same token budget and prints
+admitted/rejected counts, ticks, wall-clock, and peak occupancy — then
+lets ``repro.tune`` pick the page size through the same modeled-cost
+path the fleet uses (:class:`~repro.runtime.serve.KVPageTunable`,
+``serve.kv_page``).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.runtime.serve import Server, kv_page_tunable
+from repro.tune import tune
+
+SMOKE = dict(short_len=8, long_len=72, requests=6, max_new=8,
+             slots=4, page_size=16, prefill_chunk=16)
+FULL = dict(short_len=16, long_len=448, requests=16, max_new=16,
+            slots=8, page_size=16, prefill_chunk=64)
+
+
+def _mixed_prompts(vocab: int, *, short_len: int, long_len: int,
+                   requests: int) -> list[list[int]]:
+    """Alternating short/long prompts (the traffic that strands rings)."""
+
+    return [[(r + i) % (vocab - 1) + 1
+             for i in range(long_len if r % 2 else short_len)]
+            for r in range(requests)]
+
+
+def _drain(api, params, prompts, *, max_new, prefill_chunk,
+           **srv_kw) -> dict:
+    """Submit what fits, drain, report.  A rejected prompt (contiguous
+    context too short for it) is counted, not fatal — that is the
+    failure mode paged mode exists to remove."""
+
+    def load():
+        srv = Server(api, params, prefill_chunk=prefill_chunk, **srv_kw)
+        admitted, rejected = [], 0
+        for p in prompts:
+            try:
+                admitted.append(srv.submit(p, max_new=max_new))
+            except ValueError:
+                rejected += 1
+        return srv, admitted, rejected
+
+    srv, admitted, rejected = load()     # warmup: absorb jit compiles
+    srv.run_until_drained(max_ticks=1_000_000)
+    srv, admitted, rejected = load()
+    ticks = 0
+    t0 = time.perf_counter()
+    while srv.queue or any(r is not None for r in srv.slot_req):
+        srv.tick()
+        ticks += 1
+    wall = time.perf_counter() - t0
+    toks = sum(len(r.out) for r in srv.completed)
+    st = srv.kv_stats()
+    return {"admitted": len(admitted), "rejected": rejected,
+            "ticks": ticks, "wall": wall,
+            "tok_s": toks / max(wall, 1e-9),
+            "peak_active": int(st["peak_active"]),
+            "deferrals": int(st["deferrals"]),
+            "capacity": int(st["capacity_tokens"])}
+
+
+def run(csv: list[str], *, arch: str = "smollm-135m", short_len: int = 8,
+        long_len: int = 72, requests: int = 6, max_new: int = 8,
+        slots: int = 4, page_size: int = 16,
+        prefill_chunk: int = 16) -> None:
+    print("\n== paged vs contiguous KV cache: equal-memory drain ==")
+    cfg = get_config(arch).reduced().replace(logits_dtype="float32")
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+
+    context = long_len + max_new                 # long requests must fit
+    memory = slots * context // 2                # the shared budget
+    wide_batch = max(1, memory // context)       # contiguous, long context
+    narrow_ctx = memory // slots                 # contiguous, many slots
+    kv_pages = memory // page_size               # paged, same budget
+    prompts = _mixed_prompts(cfg.vocab, short_len=short_len,
+                             long_len=long_len, requests=requests)
+
+    print(f"{arch} (reduced): {requests} requests alternating "
+          f"{short_len}/{long_len}-token prompts + {max_new} new, "
+          f"{memory}-token KV budget")
+    cases = [
+        ("contig_wide", f"contig b={wide_batch} ctx={context}",
+         dict(batch=wide_batch, context=context)),
+        ("contig_narrow", f"contig b={slots} ctx={narrow_ctx}",
+         dict(batch=slots, context=narrow_ctx)),
+        ("paged", f"paged  b={slots} ctx={context} pg={page_size}",
+         dict(batch=slots, context=context, paged=True,
+              page_size=page_size, kv_pages=kv_pages)),
+    ]
+    hdr = (f"  {'configuration':<30} {'admit':>5} {'rej':>4} {'ticks':>6} "
+           f"{'wall_ms':>8} {'tok/s':>7} {'peak':>5} {'defer':>6}")
+    print(hdr)
+    rows = {}
+    for tag, name, kw in cases:
+        r = _drain(api, params, prompts, max_new=max_new,
+                   prefill_chunk=prefill_chunk, **kw)
+        rows[tag] = r
+        print(f"  {name:<30} {r['admitted']:>5} {r['rejected']:>4} "
+              f"{r['ticks']:>6} {r['wall'] * 1e3:>8.1f} "
+              f"{r['tok_s']:>7.1f} {r['peak_active']:>5} "
+              f"{r['deferrals']:>6}")
+        csv.append(f"paged_{tag},{r['wall'] * 1e6 / max(r['ticks'], 1):.1f},"
+                   f"admitted={r['admitted']};ticks={r['ticks']};"
+                   f"peak={r['peak_active']}")
+
+    wide, narrow, paged = rows["contig_wide"], rows["contig_narrow"], \
+        rows["paged"]
+    print(f"  -> contiguous at equal memory either rejects "
+          f"{narrow['rejected']}/{requests} requests (short context) or "
+          f"serializes at {wide['peak_active']} concurrent "
+          f"(long context); paged runs {paged['peak_active']} concurrent, "
+          f"0 rejects")
+
+    # the tuned pick, through the same modeled-cost path the fleet uses
+    tb = kv_page_tunable(api, context=context,
+                         prompt_lens=[short_len, long_len],
+                         requests=requests, max_new=max_new, batch=slots,
+                         pool_tokens=memory, params=params)
+    res = tune(tb, engine="grid", cache=None)
+    print(f"  modeled pick: page={res.best_config['page']} "
+          f"(drain {res.t_min / 1e3:.1f} ms modeled)")
+    csv.append(f"paged_tuned,{res.t_min:.1f},page={res.best_config['page']}")
+
+
+def main() -> None:
+    csv: list[str] = []
+    run(csv, **FULL)
+    for line in csv:
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

@@ -8,6 +8,7 @@ Table 3 model sweep — end-to-end tuning in well under a minute.
 ``--measure`` runs only the modeled-vs-measured comparison (the
 ``measure`` engine on real kernels, interpret mode on CPU, tiny shapes).
 ``--prefill`` runs only the chunked-vs-tokenwise serving prefill drain.
+``--paged`` runs only the paged-vs-contiguous KV cache drain.
 """
 
 from __future__ import annotations
@@ -24,11 +25,13 @@ def main(argv=None) -> None:
                     help="measure-engine smoke only (modeled vs measured)")
     ap.add_argument("--prefill", action="store_true",
                     help="chunked-vs-tokenwise serving prefill drain only")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged-vs-contiguous KV cache drain only")
     args = ap.parse_args(argv)
 
-    from benchmarks import (bench_measure, bench_prefill, bench_roofline,
-                            bench_sweep, bench_table1, bench_table2,
-                            bench_table3, bench_tpu_tuning)
+    from benchmarks import (bench_measure, bench_paged, bench_prefill,
+                            bench_roofline, bench_sweep, bench_table1,
+                            bench_table2, bench_table3, bench_tpu_tuning)
 
     csv: list[str] = []
     t0 = time.perf_counter()
@@ -36,12 +39,15 @@ def main(argv=None) -> None:
         bench_measure.run(csv)
     elif args.prefill:
         bench_prefill.run(csv, **bench_prefill.SMOKE)
+    elif args.paged:
+        bench_paged.run(csv, **bench_paged.SMOKE)
     elif args.smoke:
         bench_table3.run(csv)
         bench_tpu_tuning.run(csv, cells=[("minitron-8b", "train_4k", 1)])
         bench_tpu_tuning.run_cache(csv)
         bench_measure.run(csv)
         bench_prefill.run(csv, **bench_prefill.SMOKE)
+        bench_paged.run(csv, **bench_paged.SMOKE)
     else:
         bench_table1.run(csv)
         bench_table2.run(csv)
@@ -53,6 +59,7 @@ def main(argv=None) -> None:
         bench_measure.run(csv, cases=bench_measure.FULL_CASES,
                           top_k=4, repeats=3)
         bench_prefill.run(csv, **bench_prefill.FULL)
+        bench_paged.run(csv, **bench_paged.FULL)
         bench_roofline.run(csv)
     dt = time.perf_counter() - t0
 

@@ -8,7 +8,7 @@ fleet scale.
 
 Equivalent CLI (what a real rollout pipeline runs)::
 
-    python -m repro.tune --cache warm.json warmup examples/plans/fleet_warmup.json
+    python -m repro.tune --cache warm.json warmup examples/plans/fleet_warmup.json --workers 4
     python -m repro.tune --cache warm.json export artifact.json
     python -m repro.tune --cache node.json merge artifact.json
     python -m repro.tune --cache node.json ls
@@ -27,20 +27,23 @@ with tempfile.TemporaryDirectory() as d:
     d = Path(d)
 
     # 1. warm-up node: run the plan (all four Pallas kernel tunables,
-    # the serving-slot tunable, and a meta "tune the tuner" job)
+    # the serving slot/prefill-chunk/kv-page tunables, and a meta
+    # "tune the tuner" job) — jobs are independent, so thread-pool them
     warm = TuningCache(d / "warm.json")
     plan = TuningPlan.from_spec(PLAN)
-    report = plan.run(cache=warm, progress=print)
+    report = plan.run(cache=warm, progress=print, workers=4)
     assert report.ok, report.summary()
 
     # 2. ship: export a schema-versioned artifact, merge into a fresh
-    # node's cache (prefer_measured keeps wall-clock picks on conflict)
+    # node's cache (prefer_measured keeps wall-clock picks on conflict;
+    # the bundle's provenance meta rides along as each entry's origin)
     bundle = warm.export_artifact(d / "artifact.json")
     node = TuningCache(d / "node.json")
     merged = node.merge_artifact(d / "artifact.json")
     node.save()
     print(f"shipped {bundle['entry_count']} entries; node merged "
-          f"{merged['added']} added / {merged['kept']} kept")
+          f"{merged['added']} added / {merged['kept']} kept "
+          f"(from {merged['meta']['tool']} on {merged['meta']['host']})")
 
     # 3. fleet node: @autotune resolves purely from the merged cache
     set_default_cache(node)

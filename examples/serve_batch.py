@@ -1,4 +1,6 @@
-"""Batched serving example (continuous batching over decode slots).
+"""Batched serving example (continuous batching over decode slots),
+contiguous rings first, then the same load through the paged KV cache
+(shared page pool, admission by free pages).
 
     PYTHONPATH=src python examples/serve_batch.py
 """
@@ -7,3 +9,7 @@ from repro.launch.serve import main
 
 main(["--arch", "qwen3-32b", "--preset", "smoke", "--requests", "10",
       "--batch", "4", "--context", "64", "--max-new", "6"])
+
+main(["--arch", "qwen3-32b", "--preset", "smoke", "--requests", "10",
+      "--batch", "4", "--context", "64", "--max-new", "6",
+      "--paged", "--page-size", "8"])

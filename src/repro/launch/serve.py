@@ -15,7 +15,7 @@ import numpy as np
 
 from ..configs import get_config
 from ..models import build_model
-from ..runtime.serve import (Server, decode_batch_tunable,
+from ..runtime.serve import (Server, decode_batch_tunable, kv_page_tunable,
                              prefill_chunk_tunable)
 
 
@@ -30,15 +30,26 @@ def main(argv=None) -> None:
     ap.add_argument("--prompt-len", type=int, default=6)
     ap.add_argument("--prefill-chunk", type=int, default=32,
                     help="prompt tokens per chunked-prefill tick")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache: slots share a page pool instead "
+                         "of reserving a full context-length ring each")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (with --paged)")
+    ap.add_argument("--kv-pages", type=int, default=None,
+                    help="pool size in pages (default: full per-slot "
+                         "backing, batch * ceil(context/page))")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--tune-batch", action="store_true",
                     help="pick the slot count via repro.tune")
     ap.add_argument("--tune-prefill", action="store_true",
                     help="pick the prefill chunk size via repro.tune")
+    ap.add_argument("--tune-page", action="store_true",
+                    help="pick the KV page size via repro.tune "
+                         "(implies --paged)")
     ap.add_argument("--tune-engine", default="grid",
-                    help="tuning engine for --tune-batch/--tune-prefill; "
-                         "'measure' refines the modeled pick with real "
-                         "server drains (wall-clock)")
+                    help="tuning engine for --tune-batch/--tune-prefill/"
+                         "--tune-page; 'measure' refines the modeled pick "
+                         "with real server drains (wall-clock)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -63,6 +74,8 @@ def main(argv=None) -> None:
 
     batch = args.batch
     prefill_chunk = args.prefill_chunk
+    page_size = args.page_size
+    paged = args.paged or args.tune_page
     if args.tune_batch:
         tb = decode_batch_tunable(api, context=args.context,
                                   requests=args.requests,
@@ -77,9 +90,16 @@ def main(argv=None) -> None:
                                    max_new=args.max_new,
                                    batch=batch, params=params)
         prefill_chunk = run_job(tp, "prefill", "chunk")
+    if args.tune_page:
+        tk = kv_page_tunable(api, context=args.context,
+                             prompt_lens=[args.prompt_len],
+                             requests=args.requests, max_new=args.max_new,
+                             batch=batch, params=params)
+        page_size = run_job(tk, "page", "page")
 
     server = Server(api, params, batch=batch, context=args.context,
-                    prefill_chunk=prefill_chunk)
+                    prefill_chunk=prefill_chunk, paged=paged,
+                    page_size=page_size, kv_pages=args.kv_pages)
     rng = np.random.default_rng(args.seed)
     for _ in range(args.requests):
         prompt = rng.integers(0, cfg.vocab, args.prompt_len).tolist()
@@ -99,6 +119,12 @@ def main(argv=None) -> None:
     print(f"served {len(done)} requests / {total_tokens} tokens in "
           f"{ticks} engine ticks, {wall:.2f}s "
           f"({total_tokens / max(wall, 1e-9):.1f} tok/s)")
+    if paged:
+        st = server.kv_stats()
+        print(f"  paged kv: page={page_size} pool={st['n_pages']:.0f} pages "
+              f"peak_used={st['peak_used_pages']:.0f} "
+              f"peak_active={st['peak_active']:.0f} "
+              f"deferrals={st['deferrals']:.0f}")
     for r in done[:3]:
         print(f"  req{r.rid}: prompt={r.prompt[:4]}... out={r.out}")
 

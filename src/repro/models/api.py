@@ -76,9 +76,17 @@ class ModelAPI:
                           batch.get("img_embeds"))
 
     # -- decode ---------------------------------------------------------
-    def decode_block_specs(self, batch: int, context: int) -> dict:
+    def decode_block_specs(self, batch: int, context: int,
+                           paged: Any = None) -> dict:
         """Decode state of ONE block (unstacked) — also used by the
-        dry-run's block-level cost lowering."""
+        dry-run's block-level cost lowering.
+
+        ``paged`` (a :class:`~repro.runtime.kv.PagedKVSpec`) swaps the
+        per-slot KV rings for a shared page pool — attention state
+        becomes ``(n_pages, Hkv, page_size, hd)`` and slots address it
+        through the page table fed to :meth:`decode_step` /
+        :meth:`prefill_step`.  Recurrent (SSM) and cross/encoder state
+        stay per-slot: they are O(1) in context, paging buys nothing."""
 
         cfg = self.cfg
         kinds, _ = _block_plan(cfg)
@@ -87,7 +95,10 @@ class ModelAPI:
         for i, kind in enumerate(kinds):
             entry: dict[str, Any] = {}
             if kind in ("dense", "moe", "hybrid", "encoder"):
-                entry["kv"] = attn.kv_cache_specs(cfg, batch, C)
+                entry["kv"] = (attn.kv_pool_specs(cfg, paged.n_pages,
+                                                  paged.page_size)
+                               if paged is not None
+                               else attn.kv_cache_specs(cfg, batch, C))
             if kind in ("ssm", "hybrid"):
                 entry["ssm"] = ssm_mod.ssm_state_specs(cfg, batch)
             if kind == "cross":
@@ -102,10 +113,11 @@ class ModelAPI:
             per_block[f"{i}_{kind}"] = entry
         return per_block
 
-    def decode_state_specs(self, batch: int, context: int) -> dict:
+    def decode_state_specs(self, batch: int, context: int,
+                           paged: Any = None) -> dict:
         cfg = self.cfg
         _, n_blocks = _block_plan(cfg)
-        per_block = self.decode_block_specs(batch, context)
+        per_block = self.decode_block_specs(batch, context, paged)
         state: dict[str, Any] = {"blocks": stack_specs(per_block, n_blocks)}
         if cfg.is_encdec:
             Hkv, hd = cfg.n_kv_heads, cfg.hd
@@ -118,18 +130,25 @@ class ModelAPI:
             state["xattn"] = stack_specs(xkv, cfg.n_layers)
         return state
 
-    def init_decode_state(self, batch: int, context: int):
-        return init_params(self.decode_state_specs(batch, context),
+    def init_decode_state(self, batch: int, context: int, paged: Any = None):
+        return init_params(self.decode_state_specs(batch, context, paged),
                            jax.random.PRNGKey(0))
 
     def decode_step(self, params, state, tokens: jax.Array,
-                    cur_len: jax.Array):
+                    cur_len: jax.Array, page_table: jax.Array | None = None,
+                    active: jax.Array | None = None):
         """tokens: (B, 1) -> (logits (B, V), new state).
 
         ``cur_len`` is a scalar token count, or a (B,) vector of
         per-slot counts — the continuous-batching server feeds each
         slot's own position so mixed-progress slots decode correctly
-        in one batch."""
+        in one batch.
+
+        ``page_table`` ((B, M) int32, -1 = unallocated) switches the
+        attention state to the paged pool layout; ``active`` ((B,)
+        bool) then gates pool writes per slot INSIDE attention — the
+        pool is shared, so the caller cannot slice a per-slot merge out
+        of the returned state the way it can with per-slot rings."""
 
         cfg = self.cfg
         kinds, _ = _block_plan(cfg)
@@ -139,7 +158,7 @@ class ModelAPI:
         if cfg.is_encdec:
             x = x + _sinusoid_at(cur_len[:, None], cfg.d_model, x.dtype)
 
-        body = make_decode_body(cfg, kinds, cur_len)
+        body = make_decode_body(cfg, kinds, cur_len, page_table, active)
 
         if cfg.is_encdec:
             xs = (params["blocks"], state["blocks"],
@@ -153,7 +172,8 @@ class ModelAPI:
         return logits, new_state
 
     def prefill_step(self, params, state, tokens: jax.Array,
-                     positions: jax.Array, lengths: jax.Array | None = None):
+                     positions: jax.Array, lengths: jax.Array | None = None,
+                     page_table: jax.Array | None = None):
         """Chunked serving-side prefill: advance a CHUNK of prompt
         tokens per call against the decode caches.
 
@@ -162,6 +182,9 @@ class ModelAPI:
         of this chunk per slot (default: all T).  Slots with length 0
         (decoding or idle while others prefill) are untouched: padding
         tokens neither write the KV ring nor advance SSM state.
+        ``page_table`` switches the KV writes/reads to the paged pool
+        (``lengths`` already gates the scatter per slot, so no separate
+        ``active`` mask is needed).
 
         Returns ``(logits (B, V), new state)`` where each slot's logits
         are read at its LAST valid chunk token — the next-token
@@ -181,7 +204,8 @@ class ModelAPI:
             pos_grid = positions[:, None] + jnp.arange(T, dtype=jnp.int32)
             x = x + _sinusoid_at(pos_grid, cfg.d_model, x.dtype)
 
-        body = make_prefill_body(cfg, kinds, positions, lengths, valid)
+        body = make_prefill_body(cfg, kinds, positions, lengths, valid,
+                                 page_table)
 
         if cfg.is_encdec:
             xs = (params["blocks"], state["blocks"],
@@ -224,7 +248,8 @@ class ModelAPI:
 
     # -- assigned-shape input specs ----------------------------------------
     def input_specs(self, shape: ShapeSpec, *, reduced: bool = False,
-                    prefill_chunk: int | None = None) -> dict:
+                    prefill_chunk: int | None = None,
+                    paged: Any = None) -> dict:
         """ShapeDtypeStruct stand-ins for every model input of a shape
         (the dry-run contract; no allocation).
 
@@ -233,7 +258,11 @@ class ModelAPI:
         spec lowered a different ``decode_step`` than serving runs.
         ``prefill_chunk=T`` instead describes the chunked
         :meth:`prefill_step` inputs (tokens (B, T) + per-slot positions
-        and lengths)."""
+        and lengths).  ``paged`` (a
+        :class:`~repro.runtime.kv.PagedKVSpec`) switches the state tree
+        to the page-pool layout and adds the ``page_table`` (and, for
+        decode, the per-slot ``active`` write gate) the paged steps
+        take."""
 
         cfg = self.cfg
         B, S = shape.global_batch, shape.seq_len
@@ -248,23 +277,42 @@ class ModelAPI:
                 out["frames"] = jax.ShapeDtypeStruct(
                     (B, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
             return out
-        state = abstract_params(self.decode_state_specs(B, S))
+        state = abstract_params(self.decode_state_specs(B, S, paged))
+        paged_specs = {} if paged is None else {
+            "page_table": jax.ShapeDtypeStruct((B, paged.pages_per_slot),
+                                               jnp.int32)}
         if prefill_chunk is not None:
             # chunked serving-side prefill step
             return {"tokens": jax.ShapeDtypeStruct((B, prefill_chunk),
                                                    jnp.int32),
                     "state": state,
                     "positions": jax.ShapeDtypeStruct((B,), jnp.int32),
-                    "lengths": jax.ShapeDtypeStruct((B,), jnp.int32)}
+                    "lengths": jax.ShapeDtypeStruct((B,), jnp.int32),
+                    **paged_specs}
         # decode: one new token per slot + state of length S
+        if paged is not None:
+            paged_specs["active"] = jax.ShapeDtypeStruct((B,), jnp.bool_)
         return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
                 "state": state,
-                "cur_len": jax.ShapeDtypeStruct((B,), jnp.int32)}
+                "cur_len": jax.ShapeDtypeStruct((B,), jnp.int32),
+                **paged_specs}
 
 
-def make_decode_body(cfg: ArchConfig, kinds: list[str], cur_len: jax.Array):
+def make_decode_body(cfg: ArchConfig, kinds: list[str], cur_len: jax.Array,
+                     page_table: jax.Array | None = None,
+                     active: jax.Array | None = None):
     """One decode block: the scan body of ``decode_step`` and the unit
-    lowered by the dry-run's block-cost analysis."""
+    lowered by the dry-run's block-cost analysis.  With ``page_table``
+    the attention state is the shared paged pool (``active`` gates its
+    writes per slot); recurrent/cross state is per-slot either way."""
+
+    def one_attn(p, hn, c):
+        if page_table is not None:
+            return attn.decode_attention_paged(
+                p, cfg, hn, c, page_table, cur_len, window=cfg.window,
+                active=active)
+        return attn.decode_attention(p, cfg, hn, c, cur_len,
+                                     window=cfg.window)
 
     def body(carry, scanned):
         h = carry
@@ -279,14 +327,10 @@ def make_decode_body(cfg: ArchConfig, kinds: list[str], cur_len: jax.Array):
             nc: dict[str, Any] = {}
             hn = rms_norm(h, p["ln1"])
             if kind in ("dense", "moe", "encoder"):
-                a, nc["kv"] = attn.decode_attention(
-                    p["attn"], cfg, hn, c["kv"], cur_len,
-                    window=cfg.window)
+                a, nc["kv"] = one_attn(p["attn"], hn, c["kv"])
                 h = h + a
             elif kind == "hybrid":
-                a, nc["kv"] = attn.decode_attention(
-                    p["attn"], cfg, hn, c["kv"], cur_len,
-                    window=cfg.window)
+                a, nc["kv"] = one_attn(p["attn"], hn, c["kv"])
                 m, nc["ssm"] = ssm_mod.ssm_decode_step(
                     p["ssm"], cfg, hn, c["ssm"])
                 h = h + p["mix"][0] * a + p["mix"][1] * m
@@ -317,13 +361,23 @@ def make_decode_body(cfg: ArchConfig, kinds: list[str], cur_len: jax.Array):
 
 def make_prefill_body(cfg: ArchConfig, kinds: list[str],
                       positions: jax.Array, lengths: jax.Array,
-                      valid: jax.Array):
+                      valid: jax.Array,
+                      page_table: jax.Array | None = None):
     """One chunked-prefill block: the scan body of ``prefill_step`` —
     the multi-token sibling of :func:`make_decode_body`.  Attention
     advances the chunk through :func:`attn.decode_attention_chunked`
-    (chunk-wide KV scatter, chunk-causal masking), SSM/hybrid state
-    steps the chunk via scan, the enc-dec cross path is unchanged
-    (already chunk-shape agnostic)."""
+    (chunk-wide KV scatter, chunk-causal masking) — or its paged
+    sibling when a ``page_table`` is given — SSM/hybrid state steps the
+    chunk via scan, the enc-dec cross path is unchanged (already
+    chunk-shape agnostic)."""
+
+    def one_attn(p, hn, c):
+        if page_table is not None:
+            return attn.decode_attention_chunked_paged(
+                p, cfg, hn, c, page_table, positions, lengths,
+                window=cfg.window)
+        return attn.decode_attention_chunked(
+            p, cfg, hn, c, positions, lengths, window=cfg.window)
 
     def body(carry, scanned):
         h = carry
@@ -338,14 +392,10 @@ def make_prefill_body(cfg: ArchConfig, kinds: list[str],
             nc: dict[str, Any] = {}
             hn = rms_norm(h, p["ln1"])
             if kind in ("dense", "moe", "encoder"):
-                a, nc["kv"] = attn.decode_attention_chunked(
-                    p["attn"], cfg, hn, c["kv"], positions, lengths,
-                    window=cfg.window)
+                a, nc["kv"] = one_attn(p["attn"], hn, c["kv"])
                 h = h + a
             elif kind == "hybrid":
-                a, nc["kv"] = attn.decode_attention_chunked(
-                    p["attn"], cfg, hn, c["kv"], positions, lengths,
-                    window=cfg.window)
+                a, nc["kv"] = one_attn(p["attn"], hn, c["kv"])
                 m, nc["ssm"] = ssm_mod.ssm_prefill_step(
                     p["ssm"], cfg, hn, c["ssm"], valid)
                 h = h + p["mix"][0] * a + p["mix"][1] * m

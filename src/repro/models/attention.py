@@ -252,20 +252,12 @@ def decode_attention(p: dict, cfg: ArchConfig, x: jax.Array, cache: dict,
                 (abs_pos <= cl)
     else:
         valid = idx <= cl                         # (B, C)
-    mask = valid[:, None, None, :]
+    mask = valid[:, None, None, None, :]          # (B, 1, 1, 1, C)
 
     # grouped GQA attention: contract q head-groups against the kv-head
     # cache directly — jnp.repeat's broadcast made GSPMD all-gather the
     # whole cache per layer (§Perf cell B, 8 GiB/block)
-    B2, H, one, hd = q.shape
-    Hkv = k.shape[1]
-    g = H // Hkv
-    qg = q.reshape(B2, Hkv, g, hd).astype(jnp.float32) * cfg.hd ** -0.5
-    s = jnp.einsum("bkgd,bksd->bkgs", qg, k.astype(jnp.float32))
-    s = jnp.where(mask, s, NEG_INF)
-    pr = jax.nn.softmax(s, axis=-1)
-    og = jnp.einsum("bkgs,bksd->bkgd", pr, v.astype(jnp.float32))
-    o = og.reshape(B2, H, 1, hd).astype(x.dtype)
+    o = _grouped_sdpa(q, k, v, mask, cfg.hd ** -0.5).astype(x.dtype)
     out = jnp.einsum("bhsk,hkd->bsd", o, p["wo"])
     return lc(out, "batch", "seq", "embed"), new_cache
 
@@ -343,17 +335,205 @@ def decode_attention_chunked(p: dict, cfg: ArchConfig, x: jax.Array,
                              k_new.astype(jnp.float32)], axis=2)
     v_all = jnp.concatenate([cache["v"].astype(jnp.float32),
                              v_new.astype(jnp.float32)], axis=2)
-    B2, H, T2, hd = q.shape
-    Hkv = k_all.shape[1]
-    g = H // Hkv
-    qg = q.reshape(B2, Hkv, g, T, hd).astype(jnp.float32) * cfg.hd ** -0.5
-    s = jnp.einsum("bkgtd,bksd->bkgts", qg, k_all)
-    s = jnp.where(mask, s, NEG_INF)
-    pr = jax.nn.softmax(s, axis=-1)
-    og = jnp.einsum("bkgts,bksd->bkgtd", pr, v_all)
-    o = og.reshape(B2, H, T, hd).astype(x.dtype)
+    o = _grouped_sdpa(q, k_all, v_all, mask, cfg.hd ** -0.5).astype(x.dtype)
     out = jnp.einsum("bhsk,hkd->bsd", o, p["wo"])
     return lc(out, "batch", "seq", "embed"), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Paged cached decode (shared page pool instead of per-slot rings)
+# ---------------------------------------------------------------------------
+
+
+def kv_pool_specs(cfg: ArchConfig, n_pages: int, page_size: int) -> dict:
+    """Paged KV storage for one block: a POOL of ``n_pages`` fixed-size
+    pages shared by every serving slot, addressed through per-slot page
+    tables (:mod:`repro.runtime.kv`) — the paged sibling of
+    :func:`kv_cache_specs`.  Pages play the batch role of the
+    contiguous layout, so they take its sharding axis."""
+
+    Hkv, hd = cfg.n_kv_heads, cfg.hd
+    return {
+        "k": PSpec((n_pages, Hkv, page_size, hd),
+                   ("cache_batch", "kv_heads", None, "head_dim"),
+                   init="zeros"),
+        "v": PSpec((n_pages, Hkv, page_size, hd),
+                   ("cache_batch", "kv_heads", None, "head_dim"),
+                   init="zeros"),
+    }
+
+
+def _gather_pool(pool_kv: jax.Array, page_table: jax.Array) -> jax.Array:
+    """(P, Hkv, ps, hd) pool -> (B, Hkv, M*ps, hd) per-slot linear view
+    through the page table (unallocated entries gather page 0 — callers
+    mask them by ``page_table >= 0``)."""
+
+    g = pool_kv[jnp.clip(page_table, 0)]          # (B, M, Hkv, ps, hd)
+    B, M, Hkv, ps, hd = g.shape
+    return g.transpose(0, 2, 1, 3, 4).reshape(B, Hkv, M * ps, hd)
+
+
+def _pool_validity(page_table: jax.Array, page_size: int) -> jax.Array:
+    """(B, M*ps) bool: which linear positions are backed by a live page."""
+
+    return jnp.repeat(page_table >= 0, page_size, axis=1)
+
+
+def _grouped_sdpa(q: jax.Array, k: jax.Array, v: jax.Array,
+                  mask: jax.Array, scale: float) -> jax.Array:
+    """Grouped GQA attention: contract q head-groups against the
+    kv-head cache directly (no head repeat — same sharding rationale as
+    :func:`decode_attention`).  q: (B, H, T, hd); k/v: (B, Hkv, S, hd);
+    mask broadcastable to (B, Hkv, g, T, S); returns (B, H, T, hd)."""
+
+    B, H, T, hd = q.shape
+    Hkv = k.shape[1]
+    g = H // Hkv
+    qg = q.reshape(B, Hkv, g, T, hd).astype(jnp.float32) * scale
+    s = jnp.einsum("bkgtd,bksd->bkgts", qg, k.astype(jnp.float32))
+    s = jnp.where(mask, s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    og = jnp.einsum("bkgts,bksd->bkgtd", pr, v.astype(jnp.float32))
+    return og.reshape(B, H, T, hd)
+
+
+def decode_attention_paged(p: dict, cfg: ArchConfig, x: jax.Array,
+                           pool: dict, page_table: jax.Array,
+                           cur_len: jax.Array, *,
+                           window: int | None = None,
+                           active: jax.Array | None = None
+                           ) -> tuple[jax.Array, dict]:
+    """One-token attention against a PAGED KV pool — the paged sibling
+    of :func:`decode_attention`, same numerics.
+
+    x: (B, 1, d); pool["k"/"v"]: (P, Hkv, page_size, hd) shared by all
+    slots; page_table: (B, M) physical page per logical page (-1 =
+    unallocated); cur_len: (B,) tokens already cached per slot.  The
+    new K/V lands at physical page ``page_table[b, pos // ps]``, offset
+    ``pos % ps``; queries then attend the slot's pages through a
+    page-table gather under the same absolute-position causal/window
+    masks as the contiguous path.  ``active`` gates writes per slot —
+    the pool is SHARED, so the server cannot gate the merged state
+    per-slot afterwards the way it can with per-slot rings; an idle or
+    prefilling neighbour must not scatter a garbage token here."""
+
+    B, one, d = x.shape
+    P, Hkv, ps, hd = pool["k"].shape
+    M = page_table.shape[1]
+    cur_len = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32), (B,))
+    if active is None:
+        active = jnp.ones((B,), bool)
+    positions = cur_len[:, None]                  # (B, 1)
+    q, k_new, v_new = _project_qkv(p, cfg, x, x)
+    if cfg.use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k_new = rope(k_new, positions, cfg.rope_theta)
+
+    # scatter: slot b writes page page_table[b, pos//ps] offset pos%ps.
+    # Pages are slot-exclusive (allocator invariant), so at most one
+    # slot writes any (page, offset); one-hot + argmax keeps the update
+    # elementwise under pool sharding, as in decode_attention.
+    lp = jnp.clip(cur_len // ps, 0, M - 1)        # (B,) logical page
+    off = cur_len % ps                            # (B,)
+    phys = jnp.take_along_axis(page_table, lp[:, None], axis=1)[:, 0]
+    phys = jnp.where(active, phys, -1)            # inactive: never match
+    hot = (jnp.arange(P)[None, :] == phys[:, None])[:, :, None] \
+        & (jnp.arange(ps)[None, :] == off[:, None])[:, None, :]  # (B,P,ps)
+    written = hot.any(axis=0)                     # (P, ps)
+    writer = jnp.argmax(hot, axis=0)              # (P, ps) -> slot index
+
+    def scatter(new, old):                        # new: (B, Hkv, 1, hd)
+        vals = new[writer, :, 0, :].transpose(0, 2, 1, 3)  # (P,Hkv,ps,hd)
+        return jnp.where(written[:, None, :, None], vals.astype(old.dtype),
+                         old)
+
+    new_pool = {"k": scatter(k_new, pool["k"]),
+                "v": scatter(v_new, pool["v"])}
+
+    # gather the slot's linear view from the UPDATED pool; position t
+    # lives at page t//ps — validity is the same absolute-position mask
+    # as the contiguous path plus "is the page live"
+    k = _gather_pool(new_pool["k"], page_table)   # (B, Hkv, M*ps, hd)
+    v = _gather_pool(new_pool["v"], page_table)
+    t = jnp.arange(M * ps, dtype=jnp.int32)[None, :]        # (1, M*ps)
+    cl = cur_len[:, None]                                   # (B, 1)
+    valid = (t <= cl) & _pool_validity(page_table, ps)
+    if window is not None:
+        valid &= t >= cl - window + 1
+    mask = valid[:, None, None, None, :]          # (B, 1, 1, 1, M*ps)
+
+    o = _grouped_sdpa(q, k, v, mask, cfg.hd ** -0.5).astype(x.dtype)
+    out = jnp.einsum("bhsk,hkd->bsd", o, p["wo"])
+    return lc(out, "batch", "seq", "embed"), new_pool
+
+
+def decode_attention_chunked_paged(p: dict, cfg: ArchConfig, x: jax.Array,
+                                   pool: dict, page_table: jax.Array,
+                                   cur_len: jax.Array, lengths: jax.Array,
+                                   *, window: int | None = None
+                                   ) -> tuple[jax.Array, dict]:
+    """Chunked cached prefill against a paged pool — the paged sibling
+    of :func:`decode_attention_chunked`.
+
+    Unlike the ring layout, paged positions are unique (no wraparound
+    inside a chunk), so the chunk K/V is scattered first and queries
+    attend the *updated* pool directly: every key position ``<= qp`` is
+    genuinely written, the chunk-causal mask does the rest.  ``lengths``
+    gates both the scatter and nothing else is needed per slot —
+    padding rows (idle/decoding neighbours) write no page."""
+
+    B, T, d = x.shape
+    P, Hkv, ps, hd = pool["k"].shape
+    M = page_table.shape[1]
+    cur_len = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32), (B,))
+    lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (B,))
+    t_idx = jnp.arange(T, dtype=jnp.int32)
+    pos = cur_len[:, None] + t_idx[None, :]            # (B, T) absolute
+    valid = t_idx[None, :] < lengths[:, None]          # (B, T)
+
+    q, k_new, v_new = _project_qkv(p, cfg, x, x)
+    if cfg.use_rope:
+        q = rope(q, pos, cfg.rope_theta)
+        k_new = rope(k_new, pos, cfg.rope_theta)
+
+    # scatter: chunk token (b, t) -> page page_table[b, pos//ps], offset
+    # pos%ps; valid tokens only.  Positions are unique and pages
+    # slot-exclusive, so at most one (b, t) writes any (page, offset).
+    lp = jnp.clip(pos // ps, 0, M - 1)                 # (B, T)
+    off = pos % ps
+    phys = jnp.take_along_axis(page_table, lp, axis=1)  # (B, T)
+    phys = jnp.where(valid, phys, -1)
+    hot = (phys[:, :, None] == jnp.arange(P)[None, None, :])[..., None] \
+        & (off[:, :, None] == jnp.arange(ps)[None, None, :])[:, :, None, :]
+    hot = hot.reshape(B * T, P, ps)                    # (B*T, P, ps)
+    written = hot.any(axis=0)                          # (P, ps)
+    writer = jnp.argmax(hot, axis=0)                   # (P, ps) -> b*T+t
+
+    def scatter(new, old):                             # new: (B,Hkv,T,hd)
+        flat = new.transpose(0, 2, 1, 3).reshape(B * T, Hkv, hd)
+        vals = flat[writer].transpose(0, 2, 1, 3)      # (P, Hkv, ps, hd)
+        return jnp.where(written[:, None, :, None], vals.astype(old.dtype),
+                         old)
+
+    new_pool = {"k": scatter(k_new, pool["k"]),
+                "v": scatter(v_new, pool["v"])}
+
+    # chunk-causal read over the updated pool: key position t is valid
+    # for query position qp when t <= qp (all such positions are
+    # written — this request's earlier ticks or this chunk) and its
+    # page is live
+    k = _gather_pool(new_pool["k"], page_table)        # (B, Hkv, M*ps, hd)
+    v = _gather_pool(new_pool["v"], page_table)
+    kp = jnp.arange(M * ps, dtype=jnp.int32)[None, None, :]   # (1,1,M*ps)
+    qp = pos[:, :, None]                               # (B, T, 1)
+    mask = (kp <= qp) & _pool_validity(page_table, ps)[:, None, :]
+    if window is not None:
+        mask &= kp >= qp - window + 1
+    mask = mask[:, None, None, :, :]                   # (B,1,1,T,M*ps)
+
+    o = _grouped_sdpa(q, k, v, mask, cfg.hd ** -0.5).astype(x.dtype)
+    out = jnp.einsum("bhsk,hkd->bsd", o, p["wo"])
+    return lc(out, "batch", "seq", "embed"), new_pool
 
 
 def decode_cross_attention(p: dict, cfg: ArchConfig, x: jax.Array,
@@ -371,5 +551,6 @@ def decode_cross_attention(p: dict, cfg: ArchConfig, x: jax.Array,
 
 
 __all__ = ["attn_specs", "attention", "decode_attention",
-           "decode_attention_chunked", "kv_cache_specs",
-           "decode_cross_attention"]
+           "decode_attention_chunked", "decode_attention_paged",
+           "decode_attention_chunked_paged", "kv_cache_specs",
+           "kv_pool_specs", "decode_cross_attention"]

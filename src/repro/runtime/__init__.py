@@ -1,15 +1,20 @@
 """Runtime: train step builder, fault-tolerant supervisor, serving."""
 
+from .kv import PagedKVAllocator, PagedKVSpec
 from .loop import History, LoopConfig, SimulatedFailure, run_training
-from .serve import (DecodeBatchTunable, PrefillChunkTunable, Request,
-                    Server, choose_batch, choose_prefill_chunk,
-                    decode_batch_tunable, prefill_chunk_tunable)
+from .serve import (DecodeBatchTunable, KVPageTunable, PrefillChunkTunable,
+                    Request, Server, choose_batch, choose_kv_page,
+                    choose_prefill_chunk, decode_batch_tunable,
+                    kv_page_tunable, prefill_chunk_tunable,
+                    timed_server_drain)
 from .train import (TrainConfig, TrainState, abstract_train_state,
                     build_train_step, init_train_state)
 
 __all__ = ["History", "LoopConfig", "SimulatedFailure", "run_training",
-           "Request", "Server", "DecodeBatchTunable", "PrefillChunkTunable",
-           "choose_batch", "choose_prefill_chunk",
+           "Request", "Server", "PagedKVAllocator", "PagedKVSpec",
+           "DecodeBatchTunable", "PrefillChunkTunable", "KVPageTunable",
+           "choose_batch", "choose_prefill_chunk", "choose_kv_page",
            "decode_batch_tunable", "prefill_chunk_tunable",
+           "kv_page_tunable", "timed_server_drain",
            "TrainConfig", "TrainState", "abstract_train_state",
            "build_train_step", "init_train_state"]

@@ -1,0 +1,200 @@
+"""Paged KV-cache bookkeeping: the block-table allocator.
+
+The contiguous serving cache reserves a full ``context``-length ring per
+slot, so memory scales with ``batch * context`` whether a request uses
+three tokens or three thousand — mixed short/long traffic strands most
+of it.  Paged mode replaces the per-slot ring with a shared **pool** of
+fixed-size pages; each slot holds a *page table* mapping logical page
+``pos // page_size`` to a physical page id, pages are allocated on
+demand as prefill chunks and decode steps advance, and a retired slot's
+pages return to a free list for immediate reuse.
+
+This module is the host-side bookkeeping half (pure numpy — the page
+table crosses into jit as a plain ``(slots, pages_per_slot)`` int32
+array); the device-side gather/scatter lives in
+:func:`repro.models.attention.decode_attention_paged` and its chunked
+sibling, and :class:`repro.runtime.serve.Server` threads the two
+together (``paged=True``).
+
+Invariants the allocator maintains (tested in ``tests/test_kv.py``):
+
+* a physical page is owned by at most one live slot,
+* ``ensure`` is all-or-nothing — a partial allocation never leaks,
+* ``release``/``trim`` return pages to the free list (LIFO, so reuse is
+  immediate and cache-friendly),
+* the page table never points at a freed page.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+NO_PAGE = -1
+
+
+@dataclass(frozen=True)
+class PagedKVSpec:
+    """Static shape of a paged KV pool: ``n_pages`` physical pages of
+    ``page_size`` tokens each, addressed through per-slot page tables of
+    ``pages_per_slot`` logical entries (= ``ceil(context / page_size)``,
+    the per-request position bound)."""
+
+    n_pages: int
+    page_size: int
+    pages_per_slot: int
+
+    def __post_init__(self):
+        if self.page_size < 1 or self.n_pages < 1 or self.pages_per_slot < 1:
+            raise ValueError(f"degenerate paged spec: {self}")
+
+    @property
+    def pool_tokens(self) -> int:
+        return self.n_pages * self.page_size
+
+    @classmethod
+    def for_server(cls, *, context: int, page_size: int,
+                   n_pages: int | None = None,
+                   batch: int = 1) -> "PagedKVSpec":
+        """The spec a :class:`~repro.runtime.serve.Server` needs:
+        ``pages_per_slot`` covers ``context`` positions; ``n_pages``
+        defaults to full per-slot backing (equal memory to the
+        contiguous layout) and must cover at least one full slot so a
+        lone request can always make progress (deferral has nobody else
+        to evict)."""
+
+        pps = -(-context // page_size)
+        if n_pages is None:
+            n_pages = batch * pps
+        if n_pages < pps:
+            raise ValueError(
+                f"kv_pages={n_pages} cannot back even one full slot "
+                f"({pps} pages for context={context} at "
+                f"page_size={page_size}); a single request could deadlock")
+        return cls(n_pages=n_pages, page_size=page_size, pages_per_slot=pps)
+
+
+class PagedKVAllocator:
+    """Free-list page allocator + per-slot page tables (host side)."""
+
+    def __init__(self, spec: PagedKVSpec, n_slots: int):
+        self.spec = spec
+        self.n_slots = n_slots
+        self.page_table = np.full((n_slots, spec.pages_per_slot), NO_PAGE,
+                                  np.int32)
+        self.owner = np.full(spec.n_pages, NO_PAGE, np.int32)
+        # LIFO free list: a just-released page is handed out first
+        self._free: list[int] = list(range(spec.n_pages - 1, -1, -1))
+        # highest logical page ever backed per slot: ensure() only
+        # allocates ABOVE it, so pages trimmed away (SWA) or still held
+        # are never re-backed for positions already written
+        self._top = np.full(n_slots, -1, np.int64)
+
+    # -- queries ------------------------------------------------------------
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.spec.n_pages - len(self._free)
+
+    def pages_needed(self, n_tokens: int) -> int:
+        """Physical pages backing positions ``[0, n_tokens)``."""
+
+        return -(-max(0, n_tokens) // self.spec.page_size)
+
+    def fits(self, n_tokens: int) -> bool:
+        """Could a fresh slot hold ``n_tokens`` right now?  (Admission
+        check: positions bound by the page table, pages by the free
+        list.)"""
+
+        need = self.pages_needed(n_tokens)
+        return need <= self.spec.pages_per_slot and need <= self.free_pages
+
+    def slot_pages(self, slot: int) -> list[int]:
+        row = self.page_table[slot]
+        return [int(p) for p in row if p != NO_PAGE]
+
+    # -- mutation -----------------------------------------------------------
+
+    def ensure(self, slot: int, n_tokens: int) -> bool:
+        """Back positions ``[0, n_tokens)`` of ``slot``; allocates only
+        logical pages above the slot's high-water mark.  All-or-nothing:
+        returns False (and allocates nothing) when the free list cannot
+        cover the growth."""
+
+        if n_tokens <= 0:
+            return True
+        top_needed = (n_tokens - 1) // self.spec.page_size
+        if top_needed >= self.spec.pages_per_slot:
+            raise ValueError(
+                f"slot {slot}: {n_tokens} tokens exceed the page table "
+                f"({self.spec.pages_per_slot} pages of "
+                f"{self.spec.page_size})")
+        grow = top_needed - int(self._top[slot])
+        if grow <= 0:
+            return True
+        if grow > len(self._free):
+            return False
+        for lp in range(int(self._top[slot]) + 1, top_needed + 1):
+            page = self._free.pop()
+            self.page_table[slot, lp] = page
+            self.owner[page] = slot
+        self._top[slot] = top_needed
+        return True
+
+    def release(self, slot: int) -> int:
+        """Free every page of ``slot`` (retire / deferral); returns the
+        number released."""
+
+        pages = self.slot_pages(slot)
+        for page in pages:
+            self.owner[page] = NO_PAGE
+            self._free.append(page)
+        self.page_table[slot] = NO_PAGE
+        self._top[slot] = -1
+        return len(pages)
+
+    def trim(self, slot: int, keep_from_pos: int) -> int:
+        """Free pages of ``slot`` holding only positions strictly below
+        ``keep_from_pos`` (sliding-window reclamation: positions that
+        fell out of the window are never attended again).  Whole pages
+        only; returns the number freed."""
+
+        ps = self.spec.page_size
+        full_below = keep_from_pos // ps      # pages [0, full_below) dead
+        freed = 0
+        for lp in range(min(full_below, self.spec.pages_per_slot)):
+            page = int(self.page_table[slot, lp])
+            if page != NO_PAGE:
+                self.owner[page] = NO_PAGE
+                self._free.append(page)
+                self.page_table[slot, lp] = NO_PAGE
+                freed += 1
+        return freed
+
+    # -- stats --------------------------------------------------------------
+
+    def stats(self, live_tokens: int = 0) -> dict[str, float]:
+        """Occupancy/fragmentation snapshot.  ``live_tokens`` is the
+        caller's count of positions actually holding K/V (the allocator
+        tracks pages, not tokens); internal fragmentation is the share
+        of allocated page capacity those tokens do not fill."""
+
+        used = self.used_pages
+        cap = used * self.spec.page_size
+        return {
+            "n_pages": float(self.spec.n_pages),
+            "page_size": float(self.spec.page_size),
+            "used_pages": float(used),
+            "free_pages": float(self.free_pages),
+            "occupancy": used / self.spec.n_pages,
+            "live_tokens": float(live_tokens),
+            "fragmentation": (1.0 - live_tokens / cap) if cap else 0.0,
+        }
+
+
+__all__ = ["NO_PAGE", "PagedKVSpec", "PagedKVAllocator"]

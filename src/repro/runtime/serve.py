@@ -17,6 +17,16 @@ Greedy sampling; per-slot absolute positions drive RoPE/ring caches, so
 mixed-progress (and mixed-phase) slots coexist in one batch.  Both
 steps gate their state writes per slot, so a prefill tick cannot
 corrupt a decoding neighbour and vice versa.
+
+``paged=True`` swaps the per-slot KV rings for a shared page pool
+(:mod:`repro.runtime.kv`): admission no longer pre-reserves a full
+``context`` per slot — a request is admitted when its prompt fits the
+*currently free pages*, pages are allocated on demand as prefill chunks
+and decode steps advance, and a tick that runs out of pages defers the
+youngest slot (its pages are released and the request requeued for a
+fresh start).  Mixed short/long traffic then shares one memory budget
+instead of stranding ring capacity.  The page size is a tunable
+(:class:`KVPageTunable`, ``serve.kv_page`` in the plan registry).
 """
 
 from __future__ import annotations
@@ -32,6 +42,7 @@ import numpy as np
 from ..core.search_space import Param, SearchSpace
 from ..core.tpu_machine import HBM_BW, PEAK_FLOPS
 from ..models.api import ModelAPI
+from .kv import PagedKVAllocator, PagedKVSpec
 
 
 @dataclass
@@ -45,16 +56,30 @@ class Request:
 
 class Server:
     def __init__(self, api: ModelAPI, params, *, batch: int, context: int,
-                 prefill_chunk: int = 32):
+                 prefill_chunk: int = 32, paged: bool = False,
+                 page_size: int = 16, kv_pages: int | None = None):
         self.api = api
         self.params = params
         self.batch = batch
         self.context = context
         self.prefill_chunk = max(1, min(prefill_chunk, context))
-        self.state = api.init_decode_state(batch, context)
+        self.paged = paged
+        self.alloc: PagedKVAllocator | None = None
+        if paged:
+            spec = PagedKVSpec.for_server(context=context,
+                                          page_size=page_size,
+                                          n_pages=kv_pages, batch=batch)
+            self.alloc = PagedKVAllocator(spec, batch)
+        self.state = api.init_decode_state(
+            batch, context, self.alloc.spec if paged else None)
         self.slot_req: list[Request | None] = [None] * batch
         self.slot_pos = np.zeros(batch, np.int32)   # per-slot token count
         self._slot_dirty = np.zeros(batch, bool)    # retired -> stale state
+        self._slot_seq = np.zeros(batch, np.int64)  # admission order
+        self._seq = 0
+        self.deferrals = 0          # paged: restarts forced by page OOM
+        self.peak_active = 0
+        self.peak_used_pages = 0
         self.queue: list[Request] = []
         self.completed: list[Request] = []
 
@@ -74,15 +99,44 @@ class Server:
                 return jnp.where(m, new, old)
             return logits, jax.tree.map(sel, new_state, state)
 
+        # paged sibling: the KV pool is SHARED, so its writes are gated
+        # per slot inside the paged attention (``active``); only the
+        # per-slot leaves (SSM recurrence, cross K/V) are merge-gated
+        # here — a blanket tree-map of ``sel`` would slice the pool on
+        # its page dim as if it were a slot dim
+        def step_paged(params, state, tokens, positions, active,
+                       page_table):
+            logits, new_state = api.decode_step(params, state, tokens,
+                                                positions, page_table,
+                                                active)
+            def sel(new, old):
+                m = active.reshape((1, active.shape[0])
+                                   + (1,) * (new.ndim - 2))
+                return jnp.where(m, new, old)
+            blocks = {}
+            for key, entry in new_state["blocks"].items():
+                old = state["blocks"][key]
+                blocks[key] = {
+                    k2: (v2 if k2 == "kv"
+                         else jax.tree.map(sel, v2, old[k2]))
+                    for k2, v2 in entry.items()}
+            return logits, {**new_state, "blocks": blocks}
+
         # jitted chunked-prefill step: per-slot chunk lengths gate every
-        # state write inside the model (KV scatter, SSM scan), so one
-        # static-shape call serves any mix of prefilling/other slots
+        # state write inside the model (KV scatter, SSM scan, paged
+        # pool), so one static-shape call serves any mix of
+        # prefilling/other slots
         def pstep(params, state, tokens, positions, lengths):
             return api.prefill_step(params, state, tokens, positions,
                                     lengths)
 
-        self._step = jax.jit(step)
-        self._prefill_step = jax.jit(pstep)
+        def pstep_paged(params, state, tokens, positions, lengths,
+                        page_table):
+            return api.prefill_step(params, state, tokens, positions,
+                                    lengths, page_table)
+
+        self._step = jax.jit(step_paged if paged else step)
+        self._prefill_step = jax.jit(pstep_paged if paged else pstep)
 
     # -- API ----------------------------------------------------------------
     def submit(self, prompt: list[int], max_new: int,
@@ -113,9 +167,13 @@ class Server:
     def _admit(self) -> None:
         for slot in range(self.batch):
             if self.slot_req[slot] is None and self.queue:
-                req = self.queue.pop(0)
+                req = self._pick_next()
+                if req is None:
+                    return
                 self.slot_req[slot] = req
                 self.slot_pos[slot] = 0
+                self._slot_seq[slot] = self._seq
+                self._seq += 1
                 req._cursor = 0  # type: ignore[attr-defined]
                 if self._slot_dirty[slot]:
                     self._reset_recurrent_state(slot)
@@ -129,6 +187,55 @@ class Server:
                         kv["k"][:, 0].astype(xk.dtype))
                     self.state["xattn"]["v"] = xv.at[:, slot].set(
                         kv["v"][:, 0].astype(xv.dtype))
+
+    def _pick_next(self) -> Request | None:
+        """Next request to admit.  Contiguous mode: strict FIFO (a free
+        slot always has a full ring reserved).  Paged mode: first-fit
+        over the queue — admit the oldest request whose PROMPT fits the
+        currently free pages (decode growth is alloc-on-demand, covered
+        by deferral), so a long prompt waiting for pages does not block
+        shorter traffic behind it."""
+
+        if not self.paged:
+            return self.queue.pop(0)
+        for i, req in enumerate(self.queue):
+            if self.alloc.fits(len(req.prompt)):
+                return self.queue.pop(i)
+        return None
+
+    def _defer_youngest(self) -> int | None:
+        """Page-OOM backpressure: evict the YOUNGEST active slot — the
+        one with the least sunk prefill/decode work — release its pages
+        and requeue its request (front of queue) for a fresh start.
+        The oldest slot is never deferred before all younger ones, so
+        it always progresses and the server cannot livelock."""
+
+        live = [s for s in range(self.batch)
+                if self.slot_req[s] is not None]
+        if not live:
+            return None
+        victim = max(live, key=lambda s: self._slot_seq[s])
+        req = self.slot_req[victim]
+        req._cursor = 0  # type: ignore[attr-defined]
+        req.out.clear()
+        self.queue.insert(0, req)
+        self.alloc.release(victim)
+        self.slot_req[victim] = None
+        self.slot_pos[victim] = 0
+        self._slot_dirty[victim] = True
+        self.deferrals += 1
+        return victim
+
+    def _ensure_pages(self, slot: int, n_tokens: int) -> bool:
+        """Back ``slot`` through ``n_tokens`` positions, deferring
+        youngest slots until the allocation fits; False when ``slot``
+        itself was deferred (skip it this tick)."""
+
+        while not self.alloc.ensure(slot, n_tokens):
+            victim = self._defer_youngest()
+            if victim is None or victim == slot:
+                return False
+        return True
 
     def _reset_recurrent_state(self, slot: int) -> None:
         """Zero a reused slot's SSM/conv state: position masking hides
@@ -159,6 +266,27 @@ class Server:
             self.completed.append(req)
             self.slot_req[slot] = None
             self._slot_dirty[slot] = True
+            if self.paged:
+                self.alloc.release(slot)
+
+    def kv_stats(self) -> dict[str, float]:
+        """Cache occupancy snapshot: live tokens vs reserved capacity
+        (plus allocator fragmentation and deferral counters in paged
+        mode) — the quantity ``bench_paged`` tables."""
+
+        live = sum(int(self.slot_pos[s]) for s in range(self.batch)
+                   if self.slot_req[s] is not None)
+        if not self.paged:
+            cap = self.batch * self.context
+            return {"live_tokens": float(live), "capacity_tokens": float(cap),
+                    "occupancy": live / cap if cap else 0.0,
+                    "deferrals": 0.0, "peak_active": float(self.peak_active)}
+        st = self.alloc.stats(live_tokens=live)
+        st["capacity_tokens"] = float(self.alloc.spec.pool_tokens)
+        st["deferrals"] = float(self.deferrals)
+        st["peak_active"] = float(self.peak_active)
+        st["peak_used_pages"] = float(self.peak_used_pages)
+        return st
 
     def tick(self) -> int:
         """One engine iteration; returns number of active slots.
@@ -168,14 +296,39 @@ class Server:
         through ``prefill_step`` — the chunk that consumes a prompt's
         last token also yields the request's first generated token,
         exactly as the tokenwise tick that fed the last prompt token
-        did."""
+        did.
+
+        Paged mode first backs every slot's positions for this tick
+        (oldest slot first); a slot the allocator cannot cover — even
+        after deferring every younger one — is itself deferred and sits
+        the tick out."""
 
         self._admit()
+        if self.paged:
+            order = sorted((s for s in range(self.batch)
+                            if self.slot_req[s] is not None),
+                           key=lambda s: self._slot_seq[s])
+            for s in order:
+                req = self.slot_req[s]
+                if req is None:          # deferred as a younger victim
+                    continue
+                if self._phase(s) == "decode":
+                    need = int(self.slot_pos[s]) + 1
+                else:
+                    cur = req._cursor  # type: ignore[attr-defined]
+                    n = min(self.prefill_chunk, len(req.prompt) - cur)
+                    need = int(self.slot_pos[s]) + n
+                self._ensure_pages(s, need)
+            self.peak_used_pages = max(self.peak_used_pages,
+                                       self.alloc.used_pages)
         active = [s for s in range(self.batch) if self.slot_req[s] is not None]
+        self.peak_active = max(self.peak_active, len(active))
         if not active:
             return 0
         decode = [s for s in active if self._phase(s) == "decode"]
         prefill = [s for s in active if self._phase(s) == "prefill"]
+        page_table = (jnp.asarray(self.alloc.page_table)
+                      if self.paged else None)
 
         if decode:
             tokens = np.zeros((self.batch, 1), np.int32)
@@ -183,10 +336,11 @@ class Server:
             for s in decode:
                 tokens[s, 0] = self.slot_req[s].out[-1]
                 mask[s] = True
+            extra = (page_table,) if self.paged else ()
             logits, self.state = self._step(self.params, self.state,
                                             jnp.asarray(tokens),
                                             jnp.asarray(self.slot_pos),
-                                            jnp.asarray(mask))
+                                            jnp.asarray(mask), *extra)
             nxt = np.asarray(jnp.argmax(logits, axis=-1))
             for s in decode:
                 req = self.slot_req[s]
@@ -205,9 +359,10 @@ class Server:
                 n = min(T, len(req.prompt) - cur)
                 tokens[s, :n] = req.prompt[cur:cur + n]
                 lengths[s] = n
+            extra = (page_table,) if self.paged else ()
             logits, self.state = self._prefill_step(
                 self.params, self.state, jnp.asarray(tokens),
-                jnp.asarray(self.slot_pos), jnp.asarray(lengths))
+                jnp.asarray(self.slot_pos), jnp.asarray(lengths), *extra)
             nxt = np.asarray(jnp.argmax(logits, axis=-1))
             for s in prefill:
                 req = self.slot_req[s]
@@ -217,6 +372,15 @@ class Server:
                 if req._cursor >= len(req.prompt):
                     req.out.append(int(nxt[s]))
                     self._retire_if_done(s)
+
+        # sliding-window reclamation: pages whose positions all fell out
+        # of the window are never attended again — hand them back.  The
+        # next tick's earliest attended position is slot_pos - window + 1.
+        if self.paged and self.api.cfg.window is not None:
+            w = self.api.cfg.window
+            for s in range(self.batch):
+                if self.slot_req[s] is not None:
+                    self.alloc.trim(s, max(0, int(self.slot_pos[s]) - w + 1))
         return len(active)
 
     def run_until_drained(self, max_ticks: int = 10_000) -> None:
@@ -233,6 +397,39 @@ class Server:
 
 KV_CACHE_BYTES = 2          # bf16 cache entries
 K_AND_V = 2                 # two tensors per layer
+
+
+def timed_server_drain(api: ModelAPI, params, *, batch: int, context: int,
+                       prompts, max_new: int, prefill_chunk: int = 32,
+                       paged: bool = False, page_size: int = 16,
+                       kv_pages: int | None = None, warmup: int = 1,
+                       iters: int = 1) -> float:
+    """Median wall-clock microseconds to drain ``prompts`` (a list of
+    token lists) through a fresh :class:`Server` — the one measurement
+    harness behind every serving tunable's ``measure(cfg)``
+    (:class:`DecodeBatchTunable`, :class:`PrefillChunkTunable`,
+    :class:`KVPageTunable`).  Warmup drains absorb the step compiles
+    for the batch/chunk shape."""
+
+    from ..kernels.common import time_fn
+    prompts = [list(p) for p in prompts]
+
+    def drain() -> None:
+        srv = Server(api, params, batch=batch, context=context,
+                     prefill_chunk=prefill_chunk, paged=paged,
+                     page_size=page_size, kv_pages=kv_pages)
+        for prompt in prompts:
+            srv.submit(prompt, max_new=max_new)
+        srv.run_until_drained()
+
+    return time_fn(drain, warmup=warmup, iters=iters)
+
+
+def _require_model(tunable, helper: str) -> None:
+    if tunable.api is None or tunable.params is None:
+        raise RuntimeError(
+            f"{type(tunable).__name__}.measure needs the model attached: "
+            f"construct with api=/params= ({helper})")
 
 
 def kv_cache_stream_s(batch: int, layers: int, cache_len: int,
@@ -302,24 +499,15 @@ class DecodeBatchTunable:
     def measure(self, cfg: Mapping[str, Any], *, warmup: int = 1,
                 iters: int = 1, prompt_len: int = 4) -> float:
         """Wall-clock microseconds to drain the expected load through a
-        real :class:`Server` at this slot count (warmup drains absorb
-        the decode-step compile for the batch shape)."""
+        real :class:`Server` at this slot count."""
 
-        if self.api is None or self.params is None:
-            raise RuntimeError(
-                "DecodeBatchTunable.measure needs the model attached: "
-                "construct with api=/params= (choose_batch(..., params=...))")
-        from ..kernels.common import time_fn
+        _require_model(self, "choose_batch(..., params=...)")
         plen = max(1, min(prompt_len, self.context - self.mean_new - 1))
-
-        def drain() -> None:
-            srv = Server(self.api, self.params,
-                         batch=int(cfg["batch"]), context=self.context)
-            for _ in range(self.requests):
-                srv.submit(list(range(1, plen + 1)), max_new=self.mean_new)
-            srv.run_until_drained()
-
-        return time_fn(drain, warmup=warmup, iters=iters)
+        return timed_server_drain(
+            self.api, self.params, batch=int(cfg["batch"]),
+            context=self.context,
+            prompts=[range(1, plen + 1)] * self.requests,
+            max_new=self.mean_new, warmup=warmup, iters=iters)
 
     def fingerprint(self) -> dict[str, Any]:
         fp = {f.name: getattr(self, f.name)
@@ -434,11 +622,7 @@ class PrefillChunkTunable:
         """Wall-clock microseconds to drain the long-prompt load through
         a real :class:`Server` at this chunk size."""
 
-        if self.api is None or self.params is None:
-            raise RuntimeError(
-                "PrefillChunkTunable.measure needs the model attached: "
-                "construct with api=/params= "
-                "(choose_prefill_chunk(..., params=...))")
+        _require_model(self, "choose_prefill_chunk(..., params=...)")
         if self.prompt_len > self.context - self.mean_new:
             # silently clamping here would measure a different load than
             # cost() models and the cache fingerprint claims
@@ -447,20 +631,12 @@ class PrefillChunkTunable:
                 f"exceeds context={self.context}; size the tunable to the "
                 f"load it will actually serve (prefill_chunk_tunable "
                 f"clamps for you)")
-        from ..kernels.common import time_fn
         vocab = self.api.cfg.vocab
-
-        def drain() -> None:
-            srv = Server(self.api, self.params, batch=self.batch,
-                         context=self.context,
-                         prefill_chunk=int(cfg["chunk"]))
-            for _ in range(self.requests):
-                srv.submit([i % (vocab - 1) + 1
-                            for i in range(self.prompt_len)],
-                           max_new=self.mean_new)
-            srv.run_until_drained()
-
-        return time_fn(drain, warmup=warmup, iters=iters)
+        prompt = [i % (vocab - 1) + 1 for i in range(self.prompt_len)]
+        return timed_server_drain(
+            self.api, self.params, batch=self.batch, context=self.context,
+            prompts=[prompt] * self.requests, max_new=self.mean_new,
+            prefill_chunk=int(cfg["chunk"]), warmup=warmup, iters=iters)
 
     def fingerprint(self) -> dict[str, Any]:
         fp = {f.name: getattr(self, f.name)
@@ -507,6 +683,151 @@ def choose_prefill_chunk(api: ModelAPI, *, context: int, prompt_len: int,
     return int(res.best_config["chunk"]), res
 
 
+@dataclass(frozen=True)
+class KVPageTunable:
+    """``repro.tune`` Tunable: the paged KV-cache page size
+    (``Server(paged=True, page_size=...)``).
+
+    The page size trades **internal fragmentation** against **gather
+    overhead**: every live request strands the unused tail of its last
+    page (~``page/2`` tokens expected), shrinking how many requests a
+    fixed pool holds concurrently — so big pages mean more drain waves;
+    but every attended token is reached through the page table, and
+    smaller pages mean more page descriptors per tick.  ``cost`` models
+    the drain of a MIXED-length load (``prompt_lens`` cycled over
+    ``requests``, ``mean_new`` decode steps each, ``batch`` slots
+    sharing ``pool_tokens`` of page capacity) in microseconds; with
+    ``api``/``params`` attached, ``measure(cfg)`` drains the same mixed
+    load through a real paged :class:`Server`."""
+
+    param_bytes: int
+    layers: int
+    d_model: int
+    kv_width: int               # GQA cache width, n_kv_heads * hd
+    context: int
+    prompt_lens: tuple[int, ...]
+    requests: int
+    mean_new: int
+    batch: int = 4
+    pool_tokens: int = 0        # 0 -> batch * context (contiguous parity)
+    prefill_chunk: int = 32
+    max_page: int = 128
+    page_gather_s: float = 2e-6  # per page descriptor chased per tick
+    dispatch_s: float = 50e-6
+    # hardware-in-the-loop handles: excluded from identity/caching
+    api: Any = field(default=None, repr=False, compare=False)
+    params: Any = field(default=None, repr=False, compare=False)
+    name: ClassVar[str] = "serve.kv_page"
+
+    def __post_init__(self):
+        # plan specs deliver JSON lists; the fingerprint and lattice
+        # want a hashable tuple
+        object.__setattr__(self, "prompt_lens", tuple(self.prompt_lens))
+        if not self.prompt_lens:
+            raise ValueError("prompt_lens must name at least one length")
+
+    def _pool(self) -> int:
+        return self.pool_tokens or self.batch * self.context
+
+    def space(self) -> SearchSpace:
+        sizes = []
+        ps = 4
+        cap = min(self.max_page, self.context)
+        while ps <= cap:
+            sizes.append(ps)
+            ps *= 2
+        return SearchSpace(params=[Param("page", tuple(sizes))])
+
+    def cost(self, cfg: Mapping[str, Any]) -> float:
+        """Modeled microseconds to drain the mixed load (same unit as
+        ``measure``): requests occupy ``ceil(total/page)`` pages each —
+        the page-rounding waste caps how many run concurrently in the
+        pool — and each tick pays the weight stream, the live-KV
+        stream, and one page-table chase per live page."""
+
+        page = cfg["page"]
+        totals = [min(L, self.context - self.mean_new) + self.mean_new
+                  for L in self.prompt_lens]
+        mean_total = sum(totals) / len(totals)
+        # page-capacity footprint of one request, fragmentation included
+        footprint = sum(-(-t // page) * page for t in totals) / len(totals)
+        conc = max(1, min(self.batch, int(self._pool() // footprint)))
+        waves = -(-self.requests // conc)
+        mean_prompt = mean_total - self.mean_new
+        ticks = -(-int(mean_prompt) // self.prefill_chunk) + self.mean_new
+        weight_s = self.param_bytes / HBM_BW
+        kv_s = kv_cache_stream_s(conc, self.layers, int(mean_total),
+                                 self.kv_width)
+        gather_s = conc * -(-int(mean_total) // page) * self.page_gather_s
+        tick_s = weight_s + kv_s + gather_s + self.dispatch_s
+        return waves * ticks * tick_s * 1e6
+
+    def measure(self, cfg: Mapping[str, Any], *, warmup: int = 1,
+                iters: int = 1) -> float:
+        """Wall-clock microseconds to drain the mixed-length load
+        through a real paged :class:`Server` at this page size."""
+
+        _require_model(self, "choose_kv_page(..., params=...)")
+        page = int(cfg["page"])
+        vocab = self.api.cfg.vocab
+        prompts = []
+        for r in range(self.requests):
+            plen = min(self.prompt_lens[r % len(self.prompt_lens)],
+                       self.context - self.mean_new)
+            prompts.append([(r + i) % (vocab - 1) + 1 for i in range(plen)])
+        kv_pages = max(self._pool() // page, -(-self.context // page))
+        return timed_server_drain(
+            self.api, self.params, batch=self.batch, context=self.context,
+            prompts=prompts, max_new=self.mean_new,
+            prefill_chunk=self.prefill_chunk, paged=True, page_size=page,
+            kv_pages=kv_pages, warmup=warmup, iters=iters)
+
+    def fingerprint(self) -> dict[str, Any]:
+        fp = {f.name: getattr(self, f.name)
+              for f in dataclasses.fields(self) if f.compare}
+        fp["prompt_lens"] = list(self.prompt_lens)
+        return {"tunable": self.name, "unit": "us", **fp}
+
+
+def kv_page_tunable(api: ModelAPI, *, context: int, prompt_lens,
+                    requests: int, max_new: int, batch: int,
+                    pool_tokens: int | None = None,
+                    params=None) -> KVPageTunable:
+    """The page-size tunable for this model + expected mixed-length
+    load — the one place the sizing wiring lives (library
+    ``choose_kv_page`` and the ``launch/serve --tune-page`` CLI both
+    build through here)."""
+
+    prompt_lens = tuple(max(1, min(p, context - max_new))
+                        for p in prompt_lens)
+    return KVPageTunable(param_bytes=api.param_count() * 2,
+                         layers=api.cfg.n_layers, d_model=api.cfg.d_model,
+                         kv_width=api.cfg.n_kv_heads * api.cfg.hd,
+                         context=context, prompt_lens=prompt_lens,
+                         requests=requests, mean_new=max_new, batch=batch,
+                         pool_tokens=pool_tokens or 0,
+                         api=api, params=params)
+
+
+def choose_kv_page(api: ModelAPI, *, context: int, prompt_lens,
+                   requests: int, max_new: int, batch: int,
+                   pool_tokens: int | None = None, cache="default",
+                   params=None, engine: str = "grid", **tune_kw):
+    """Pick ``Server(paged=True)``'s page size via ``repro.tune``;
+    returns ``(page, TuneResult)``.  ``engine="measure"`` (requires
+    ``params``) shortlists page sizes through the fragmentation/gather
+    model, then times real mixed-length paged drains and returns the
+    wall-clock winner."""
+
+    from ..tune import tune as _tune
+    tb = kv_page_tunable(api, context=context, prompt_lens=prompt_lens,
+                         requests=requests, max_new=max_new, batch=batch,
+                         pool_tokens=pool_tokens, params=params)
+    res = _tune(tb, engine=engine, cache=cache, **tune_kw)
+    return int(res.best_config["page"]), res
+
+
 __all__ = ["Server", "Request", "DecodeBatchTunable", "PrefillChunkTunable",
-           "decode_batch_tunable", "prefill_chunk_tunable", "choose_batch",
-           "choose_prefill_chunk", "kv_cache_stream_s"]
+           "KVPageTunable", "decode_batch_tunable", "prefill_chunk_tunable",
+           "kv_page_tunable", "choose_batch", "choose_prefill_chunk",
+           "choose_kv_page", "kv_cache_stream_s", "timed_server_drain"]

@@ -30,7 +30,7 @@ removed; this package is the only front door.
 from ..core.autotuner import TuneResult
 from .api import tune
 from .artifact import (ARTIFACT_SCHEMA, ArtifactError, export_artifact,
-                       load_artifact, merge_artifact)
+                       load_artifact, merge_artifact, provenance_meta)
 from .cache import (TuningCache, cache_key, default_cache,
                     platform_fingerprint, set_default_cache,
                     tunable_fingerprint)
@@ -52,5 +52,5 @@ __all__ = [
     "TuningPlan", "TuningJob", "JobResult", "PlanReport",
     "MetaEngineTunable", "register_tunable", "available_tunables",
     "build_tunable", "ARTIFACT_SCHEMA", "ArtifactError", "export_artifact",
-    "load_artifact", "merge_artifact",
+    "load_artifact", "merge_artifact", "provenance_meta",
 ]

@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import json
 import os
+import platform as _platform
 import tempfile
 import time
 from pathlib import Path
@@ -35,6 +36,25 @@ _PROVENANCE_RANK = {"modeled": 0, "measured": 1}
 
 class ArtifactError(ValueError):
     """The file is not a usable cache artifact (wrong kind/schema)."""
+
+
+def provenance_meta() -> dict[str, Any]:
+    """Who/where/when/with-what built this bundle — recorded at export,
+    surfaced by ``merge_artifact`` reports and ``ls --json``, and the
+    groundwork for signing artifacts before cross-team rollouts (a
+    signature needs a stable subject to sign)."""
+
+    try:
+        from .. import __version__ as tool_version
+    except ImportError:                                # pragma: no cover
+        tool_version = "unknown"
+    return {
+        "host": _platform.node() or "unknown",
+        "machine": _platform.machine(),
+        "python": _platform.python_version(),
+        "tool": f"repro {tool_version}",
+        "created_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+    }
 
 
 def platform_key(platform: Mapping[str, Any] | None) -> str:
@@ -71,6 +91,7 @@ def export_artifact(cache, path: str | os.PathLike, *,
         "kind": ARTIFACT_KIND,
         "schema": ARTIFACT_SCHEMA,
         "created": time.time(),
+        "meta": provenance_meta(),
         "source": str(getattr(cache, "path", "")),
         "entry_count": sum(len(g["entries"]) for g in platforms.values()),
         "skipped": skipped,
@@ -133,23 +154,35 @@ def merge_artifact(cache, path: str | os.PathLike, *,
     Policies: ``prefer_measured`` (default — measured provenance beats
     modeled, ties broken newer-wins), ``prefer_newer`` (timestamp only),
     ``keep_existing`` (only fill holes).
+
+    The bundle's provenance ``meta`` (exporting host, timestamp, tool
+    version) comes back in the report and is stamped onto every entry
+    the merge takes as ``origin``, so ``ls --json`` can answer "where
+    did this config come from" long after the bundle file is gone.
     """
 
     if policy not in MERGE_POLICIES:
         raise ValueError(f"unknown merge policy {policy!r}; "
                          f"one of {', '.join(MERGE_POLICIES)}")
     bundle = load_artifact(path)
+    meta = bundle.get("meta")
     report = {"added": 0, "replaced": 0, "kept": 0,
               "platforms": sorted(bundle.get("platforms", {})),
-              "policy": policy}
+              "policy": policy, "meta": meta}
     for group in bundle.get("platforms", {}).values():
         for key, entry in group.get("entries", {}).items():
             mine = cache.entries.get(key)
+            incoming = dict(entry)
+            # relayed bundles (warm -> node A -> re-export -> node B)
+            # keep the ORIGINAL tuning host: only stamp entries that
+            # don't already carry their provenance
+            if meta is not None and "origin" not in incoming:
+                incoming["origin"] = meta
             if mine is None:
-                cache.put_entry(key, entry)
+                cache.put_entry(key, incoming)
                 report["added"] += 1
             elif _incoming_wins(mine, entry, policy):
-                cache.put_entry(key, entry)
+                cache.put_entry(key, incoming)
                 report["replaced"] += 1
             else:
                 report["kept"] += 1
@@ -157,5 +190,5 @@ def merge_artifact(cache, path: str | os.PathLike, *,
 
 
 __all__ = ["ARTIFACT_SCHEMA", "ARTIFACT_KIND", "MERGE_POLICIES",
-           "ArtifactError", "platform_key", "export_artifact",
-           "load_artifact", "merge_artifact"]
+           "ArtifactError", "platform_key", "provenance_meta",
+           "export_artifact", "load_artifact", "merge_artifact"]

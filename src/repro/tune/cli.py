@@ -3,9 +3,10 @@
 Subcommands:
 
 * ``warmup <plan.json>`` — run a :class:`~repro.tune.plan.TuningPlan`
-  spec against the cache (skip-on-hit; ``--force`` re-tunes); prints
-  per-job progress + a summary, ``--json`` emits the machine-readable
-  report.  Exit code 1 if any job failed.
+  spec against the cache (skip-on-hit; ``--force`` re-tunes;
+  ``--workers N`` thread-pools the independent jobs); prints per-job
+  progress + a summary, ``--json`` emits the machine-readable report.
+  Exit code 1 if any job failed.
 * ``export <artifact.json>`` — write the cache as a portable
   schema-versioned bundle (``--platform`` filters, e.g. ``cpu``/``tpu``).
 * ``merge <artifact.json>`` — merge a bundle into the cache
@@ -44,6 +45,9 @@ def _build_parser() -> argparse.ArgumentParser:
     p.add_argument("plan", help="path to a plan JSON spec")
     p.add_argument("--force", action="store_true",
                    help="re-tune even on cache hits (overwrites entries)")
+    p.add_argument("--workers", type=int, default=1, metavar="N",
+                   help="run plan jobs through an N-thread pool (jobs are "
+                        "independent; per-job failure isolation preserved)")
     p.add_argument("--json", action="store_true", dest="as_json",
                    help="print the PlanReport as JSON")
 
@@ -72,6 +76,7 @@ def _build_parser() -> argparse.ArgumentParser:
 def _cmd_warmup(cache: TuningCache, args) -> int:
     plan = TuningPlan.from_spec(args.plan)
     report = plan.run(cache=cache, force=args.force,
+                      workers=args.workers,
                       progress=None if args.as_json else print)
     if args.as_json:
         print(json.dumps(report.to_json(), indent=1, sort_keys=True))
@@ -94,6 +99,11 @@ def _cmd_merge(cache: TuningCache, args) -> int:
           f"{report['added']} added, {report['replaced']} replaced, "
           f"{report['kept']} kept -> {cache.path} "
           f"({len(cache)} entries)")
+    meta = report.get("meta")
+    if meta:
+        print(f"  artifact provenance: {meta.get('tool', '?')} on "
+              f"{meta.get('host', '?')} ({meta.get('machine', '?')}) "
+              f"at {meta.get('created_utc', '?')}")
     return 0
 
 
@@ -110,6 +120,9 @@ def _cmd_ls(cache: TuningCache, args) -> int:
             "t_min": e.get("t_min"),
             "age_days": round((time.time()
                                - float(e.get("created", 0))) / 86400, 2),
+            # artifact provenance: where a merged entry was exported
+            # from (None for entries tuned locally)
+            "origin": e.get("origin"),
         })
     if args.as_json:
         print(json.dumps(rows, indent=1, sort_keys=True))

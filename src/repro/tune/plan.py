@@ -7,7 +7,8 @@ programmatically with :meth:`TuningPlan.add` or from a small dict/JSON
 spec with :meth:`TuningPlan.from_spec`, and executed by
 :meth:`TuningPlan.run` against a :class:`~repro.tune.TuningCache` —
 skip-on-hit, ``force=`` override, per-job error isolation (one bad job
-never sinks the plan), progress lines and a summary
+never sinks the plan), optional ``workers=N`` thread-pool execution of
+the independent jobs, progress lines and a summary
 :class:`PlanReport`.  The warmed cache then ships as an artifact
 (:mod:`repro.tune.artifact`) and every fleet node resolves its
 ``@autotune`` call sites from pure cache hits.
@@ -107,13 +108,15 @@ def _ensure_builtin_factories() -> None:
     from ..kernels.matmul_tuned.ops import MatmulTunable
     from ..kernels.sweep_eval.ops import SweepEvalTunable
     from ..kernels.tuned_reduction.ops import ReductionTunable
-    from ..runtime.serve import DecodeBatchTunable, PrefillChunkTunable
+    from ..runtime.serve import (DecodeBatchTunable, KVPageTunable,
+                                 PrefillChunkTunable)
     _FACTORIES.setdefault("kernels.matmul_tuned", MatmulTunable)
     _FACTORIES.setdefault("kernels.flash_attention", FlashAttentionTunable)
     _FACTORIES.setdefault("kernels.tuned_reduction", ReductionTunable)
     _FACTORIES.setdefault("kernels.sweep_eval", SweepEvalTunable)
     _FACTORIES.setdefault("serve.decode_batch", DecodeBatchTunable)
     _FACTORIES.setdefault("serve.prefill_chunk", PrefillChunkTunable)
+    _FACTORIES.setdefault("serve.kv_page", KVPageTunable)
     _FACTORIES.setdefault("platform", _platform_factory)
     _FACTORIES.setdefault("tpu.distributed", _tpu_distributed_factory)
     _FACTORIES.setdefault("meta.engine", _meta_engine_factory)
@@ -217,6 +220,10 @@ class TuningJob:
     engine_kwargs: dict[str, Any] = field(default_factory=dict)
     label: str = ""
     force: bool = False
+    # wall-clock-sensitive: this job TIMES things (measure engine, or a
+    # meta job whose cost() runs inner measure tunes), so a parallel
+    # run must not let other jobs' CPU load pollute its samples
+    timed: bool = False
 
     def materialize(self):
         tunable = self.factory
@@ -292,9 +299,11 @@ class TuningPlan:
         """Append a job (a Tunable instance or a zero-arg factory);
         returns it for further tweaking."""
 
+        timed = (engine == "measure"
+                 or isinstance(tunable_or_factory, MetaEngineTunable))
         job = TuningJob(factory=tunable_or_factory, engine=engine,
                         engine_kwargs=dict(engine_kwargs), label=label,
-                        force=force)
+                        force=force, timed=timed)
         self.jobs.append(job)
         return job
 
@@ -328,30 +337,49 @@ class TuningPlan:
                 label = jspec.get("label", name) + suffix
                 # bind via defaults: the factory resolves lazily inside
                 # run()'s error boundary, so a bad spec fails one job
-                plan.add(lambda name=name, params=params:
-                         build_tunable(name, params),
-                         engine=jspec.get("engine", "auto"), label=label,
-                         force=bool(jspec.get("force", False)),
-                         **dict(jspec.get("engine_kwargs", {})))
+                job = plan.add(lambda name=name, params=params:
+                               build_tunable(name, params),
+                               engine=jspec.get("engine", "auto"),
+                               label=label,
+                               force=bool(jspec.get("force", False)),
+                               **dict(jspec.get("engine_kwargs", {})))
+                # the factory is lazy, so classify wall-clock
+                # sensitivity from the spec name (meta jobs time their
+                # inner tunes whatever their own engine is)
+                job.timed = job.timed or name == "meta.engine"
         return plan
 
     # -- execution ----------------------------------------------------------
 
     def run(self, *, cache="default", force: bool = False,
             progress: Callable[[str], None] | None = None,
-            save: bool = True) -> PlanReport:
+            save: bool = True, workers: int = 1) -> PlanReport:
         """Execute every job through :func:`repro.tune.tune`.
 
         Cache hits skip the engine (``force=True`` — plan-wide or
         per-job — re-tunes and overwrites); a failing job is recorded
         and the plan continues.  ``save=True`` flushes a dirty
         :class:`TuningCache` at the end so a warm-up actually persists.
-        """
+
+        ``workers=N`` runs jobs through a thread pool.  Jobs that TIME
+        things (``engine="measure"``, meta jobs) are held back and run
+        serially after the pool drains — concurrent drains would sample
+        each other's CPU load and could cache a wrong wall-clock winner
+        with ``measured`` provenance, which ``prefer_measured`` would
+        then defend fleet-wide.  Per-job error isolation is preserved
+        (one bad job still only fails itself), progress lines arrive in
+        completion order, and the report lists results in PLAN order
+        either way, so serial and parallel runs are comparable job for
+        job.  One caveat: two jobs resolving to the SAME cache key are
+        skip-on-hit deduplicated serially but may both tune when run
+        concurrently (last write wins) — don't rely on intra-plan hits
+        between duplicate modeled jobs."""
 
         store = default_cache() if cache == "default" else cache
         report = PlanReport(plan=self.name)
         say = progress or (lambda line: None)
-        for i, job in enumerate(self.jobs):
+
+        def run_one(i: int, job: TuningJob) -> JobResult:
             t0 = time.perf_counter()
             label = job.label or f"job#{i}"
             try:
@@ -377,7 +405,24 @@ class TuningPlan:
                                error=f"{type(e).__name__}: {e}")
                 say(f"[{i + 1}/{len(self.jobs)}] {label}: FAILED — "
                     f"{jr.error}")
-            report.results.append(jr)
+            return jr
+
+        if workers > 1 and len(self.jobs) > 1:
+            from concurrent.futures import ThreadPoolExecutor
+            slots: list[JobResult | None] = [None] * len(self.jobs)
+            pooled = [(i, j) for i, j in enumerate(self.jobs) if not j.timed]
+            timed = [(i, j) for i, j in enumerate(self.jobs) if j.timed]
+            with ThreadPoolExecutor(max_workers=workers) as pool:
+                futures = {pool.submit(run_one, i, job): i
+                           for i, job in pooled}
+                for f, i in futures.items():
+                    slots[i] = f.result()
+            for i, job in timed:         # quiet machine: pool is drained
+                slots[i] = run_one(i, job)
+            report.results.extend(slots)
+        else:
+            report.results.extend(run_one(i, job)
+                                  for i, job in enumerate(self.jobs))
         if save and isinstance(store, TuningCache) and store.dirty:
             store.save()
         say(report.summary())

@@ -1,0 +1,381 @@
+"""Paged KV-cache subsystem tests: allocator invariants, paged-vs-
+contiguous decode numerics (dense / GQA / MHA / SWA / hybrid, staggered
+mixed-phase admissions), page-exhaustion deferral, and the page-size
+tunable's plan/cache integration."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.models.attention import (attn_specs, decode_attention,
+                                    decode_attention_paged)
+from repro.models.common import init_params
+from repro.runtime.kv import NO_PAGE, PagedKVAllocator, PagedKVSpec
+from repro.runtime.serve import KVPageTunable, Server
+
+
+# ---------------------------------------------------------------------------
+# allocator invariants
+# ---------------------------------------------------------------------------
+
+
+def make_alloc(n_pages=8, page_size=4, pages_per_slot=4, n_slots=3):
+    spec = PagedKVSpec(n_pages=n_pages, page_size=page_size,
+                       pages_per_slot=pages_per_slot)
+    return PagedKVAllocator(spec, n_slots)
+
+
+def test_allocator_pages_never_shared_between_live_slots():
+    alloc = make_alloc()
+    assert alloc.ensure(0, 10) and alloc.ensure(1, 7) and alloc.ensure(2, 3)
+    owned = {}
+    for s in range(3):
+        for p in alloc.slot_pages(s):
+            assert p not in owned, f"page {p} owned by {owned[p]} and {s}"
+            owned[p] = s
+    # ownership array agrees with the page tables
+    for p, s in owned.items():
+        assert alloc.owner[p] == s
+    assert len(owned) == alloc.used_pages == 3 + 2 + 1
+
+
+def test_allocator_ensure_is_all_or_nothing():
+    alloc = make_alloc(n_pages=4)
+    assert alloc.ensure(0, 9)                  # 3 pages
+    free_before = alloc.free_pages
+    assert not alloc.ensure(1, 9)              # needs 3, only 1 free
+    assert alloc.free_pages == free_before     # nothing leaked
+    assert alloc.slot_pages(1) == []
+    assert alloc.ensure(1, 4)                  # 1 page still fits
+
+
+def test_allocator_free_list_reuse_after_release():
+    alloc = make_alloc()
+    alloc.ensure(0, 16)                        # 4 pages
+    released = set(alloc.slot_pages(0))
+    assert alloc.release(0) == 4
+    assert alloc.page_table[0].tolist() == [NO_PAGE] * 4
+    assert alloc.free_pages == 8
+    # a fresh slot reuses the just-released pages (LIFO free list)
+    alloc.ensure(1, 16)
+    assert set(alloc.slot_pages(1)) == released
+    # and release is idempotent on an empty slot
+    assert alloc.release(0) == 0
+
+
+def test_allocator_ensure_grows_monotonically():
+    alloc = make_alloc()
+    alloc.ensure(0, 3)                         # 1 page
+    first = alloc.slot_pages(0)
+    alloc.ensure(0, 4)                         # same page covers it
+    assert alloc.slot_pages(0) == first
+    alloc.ensure(0, 5)                         # needs a second page
+    assert len(alloc.slot_pages(0)) == 2
+    assert alloc.slot_pages(0)[0] == first[0]  # prefix untouched
+
+
+def test_allocator_trim_frees_only_whole_dead_pages():
+    alloc = make_alloc(page_size=4)
+    alloc.ensure(0, 16)                        # pages for positions 0..15
+    assert alloc.trim(0, 3) == 0               # page 0 still partly live
+    assert alloc.trim(0, 4) == 1               # positions 0..3 dead
+    assert alloc.page_table[0, 0] == NO_PAGE
+    assert alloc.trim(0, 11) == 1              # page 1 dead, page 2 not
+    # trimmed logical pages are never re-backed: the high-water mark
+    # keeps ensure() from resurrecting positions already written
+    assert alloc.ensure(0, 16)
+    assert alloc.page_table[0, 0] == NO_PAGE
+    assert alloc.page_table[0, 1] == NO_PAGE
+
+
+def test_allocator_overflowing_page_table_raises():
+    alloc = make_alloc(pages_per_slot=2, page_size=4)
+    with pytest.raises(ValueError, match="exceed the page table"):
+        alloc.ensure(0, 9)
+
+
+def test_paged_spec_rejects_pool_smaller_than_one_slot():
+    with pytest.raises(ValueError, match="single request could deadlock"):
+        PagedKVSpec.for_server(context=64, page_size=8, n_pages=4)
+
+
+def test_allocator_stats_fragmentation():
+    alloc = make_alloc(page_size=4)
+    alloc.ensure(0, 5)                         # 2 pages = 8 token capacity
+    st = alloc.stats(live_tokens=5)
+    assert st["used_pages"] == 2 and st["occupancy"] == 2 / 8
+    assert st["fragmentation"] == pytest.approx(3 / 8)
+
+
+# ---------------------------------------------------------------------------
+# paged attention numerics (unit level: shuffled physical pages)
+# ---------------------------------------------------------------------------
+
+
+def test_decode_attention_paged_matches_contiguous_unit():
+    """The paged gather/scatter is pure indirection: with the same K/V
+    laid out through an arbitrary (shuffled) page table, one-token
+    attention must reproduce the contiguous path allclose."""
+
+    cfg = get_config("smollm-135m").reduced().replace(
+        logits_dtype="float32")
+    p = init_params(attn_specs(cfg), jax.random.PRNGKey(1))
+    B, C, ps = 3, 32, 8
+    M, P = C // ps, 3 * (C // ps)
+    Hkv, hd = cfg.n_kv_heads, cfg.hd
+    cur_len = np.array([5, 0, 17], np.int32)
+
+    rng = np.random.default_rng(0)
+    k_cont = np.zeros((B, Hkv, C, hd), np.float32)
+    v_cont = np.zeros((B, Hkv, C, hd), np.float32)
+    for b, n in enumerate(cur_len):
+        k_cont[b, :, :n] = rng.standard_normal((Hkv, n, hd))
+        v_cont[b, :, :n] = rng.standard_normal((Hkv, n, hd))
+
+    # shuffled physical layout of the same data
+    perm = rng.permutation(P)
+    page_table = np.full((B, M), -1, np.int32)
+    pool_k = np.zeros((P, Hkv, ps, hd), np.float32)
+    pool_v = np.zeros((P, Hkv, ps, hd), np.float32)
+    next_page = 0
+    for b, n in enumerate(cur_len):
+        for m in range(-(-int(n + 1) // ps)):   # cover the write position
+            page = int(perm[next_page])
+            next_page += 1
+            page_table[b, m] = page
+            pool_k[page] = k_cont[b, :, m * ps:(m + 1) * ps]
+            pool_v[page] = v_cont[b, :, m * ps:(m + 1) * ps]
+
+    x = rng.standard_normal((B, 1, cfg.d_model)).astype(np.float32)
+    out_c, new_c = decode_attention(
+        p, cfg, jnp.asarray(x), {"k": jnp.asarray(k_cont),
+                                 "v": jnp.asarray(v_cont)},
+        jnp.asarray(cur_len))
+    out_p, new_p = decode_attention_paged(
+        p, cfg, jnp.asarray(x), {"k": jnp.asarray(pool_k),
+                                 "v": jnp.asarray(pool_v)},
+        jnp.asarray(page_table), jnp.asarray(cur_len))
+    np.testing.assert_allclose(np.asarray(out_c), np.asarray(out_p),
+                               atol=1e-5, rtol=1e-5)
+
+    # the new token landed at its page-table target, matching the
+    # contiguous write at index cur_len
+    for b, n in enumerate(cur_len):
+        page = page_table[b, n // ps]
+        np.testing.assert_allclose(
+            np.asarray(new_p["k"])[page, :, n % ps],
+            np.asarray(new_c["k"])[b, :, n], atol=1e-6)
+
+
+def test_decode_attention_paged_inactive_slots_write_nothing():
+    """``active`` gates pool writes per slot: the pool is shared, so an
+    idle/prefilling neighbour's garbage token must not land."""
+
+    cfg = get_config("smollm-135m").reduced().replace(
+        logits_dtype="float32")
+    p = init_params(attn_specs(cfg), jax.random.PRNGKey(1))
+    Hkv, hd = cfg.n_kv_heads, cfg.hd
+    pool = {"k": jnp.zeros((4, Hkv, 4, hd)), "v": jnp.zeros((4, Hkv, 4, hd))}
+    page_table = jnp.asarray([[0, 1], [2, 3]], jnp.int32)
+    x = jnp.ones((2, 1, cfg.d_model))
+    _, new_pool = decode_attention_paged(
+        p, cfg, x, pool, page_table, jnp.asarray([0, 0]),
+        active=jnp.asarray([True, False]))
+    assert np.asarray(new_pool["k"])[0].any()          # slot 0 wrote
+    assert not np.asarray(new_pool["k"])[2:].any()     # slot 1 did not
+
+
+# ---------------------------------------------------------------------------
+# paged serving end-to-end vs contiguous
+# ---------------------------------------------------------------------------
+
+
+def _solo_out(api, params, prompt, max_new, **kw):
+    solo = Server(api, params, batch=1, context=32, **kw)
+    ref = solo.submit(prompt, max_new=max_new)
+    solo.run_until_drained()
+    return ref.out
+
+
+@pytest.mark.parametrize("arch,extra", [
+    ("smollm-135m", {}),                       # dense GQA (4 heads / 2 kv)
+    ("qwen1.5-4b", {}),                        # dense MHA + qkv bias
+    ("smollm-135m", {"window": 8}),            # sliding window (ring vs
+                                               # paged trim reclamation)
+    ("hymba-1.5b", {}),                        # hybrid attn + SSM state
+])
+def test_paged_matches_contiguous_staggered_mixed_phase(arch, extra):
+    """Paged mode is an allocation change, not a semantics change: under
+    staggered admissions with mixed prefill/decode phases in one tick,
+    every request must decode exactly as it would through the contiguous
+    ring (which itself matches the solo drain)."""
+
+    cfg = get_config(arch).reduced().replace(logits_dtype="float32",
+                                             **extra)
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(11)
+    prompt_a = rng.integers(0, cfg.vocab, 14).tolist()
+    prompt_b = rng.integers(0, cfg.vocab, 6).tolist()
+
+    srv = Server(api, params, batch=2, context=32, prefill_chunk=4,
+                 paged=True, page_size=8)
+    req_a = srv.submit(prompt_a, max_new=4)
+    for _ in range(2):
+        srv.tick()               # A mid-prefill when B arrives
+    req_b = srv.submit(prompt_b, max_new=4)
+    srv.run_until_drained()
+    assert req_a.done and req_b.done
+
+    for prompt, req in ((prompt_a, req_a), (prompt_b, req_b)):
+        assert req.out == _solo_out(api, params, prompt, 4,
+                                    prefill_chunk=4)
+
+
+def test_paged_admission_waits_for_free_pages():
+    """A pool that holds one request's pages at a time: the second
+    request queues until the first retires and releases, then reuses
+    the freed pages — and still decodes correctly."""
+
+    cfg = get_config("smollm-135m").reduced().replace(
+        logits_dtype="float32")
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    srv = Server(api, params, batch=2, context=32, paged=True,
+                 page_size=8, kv_pages=4)        # pool == one full slot
+    p1, p2 = list(range(1, 21)), list(range(3, 20))
+    r1 = srv.submit(p1, max_new=4)
+    r2 = srv.submit(p2, max_new=4)
+    srv.tick()
+    assert srv.queue and srv.queue[0] is r2      # no pages -> not admitted
+    srv.run_until_drained()
+    assert r1.done and r2.done
+    assert r1.out == _solo_out(api, params, p1, 4)
+    assert r2.out == _solo_out(api, params, p2, 4)
+
+
+def test_paged_oom_at_tick_defers_youngest_and_restarts():
+    """Decode growth exhausting the pool mid-flight defers the YOUNGEST
+    slot (pages released, request restarted from scratch); the oldest
+    keeps progressing, both finish with solo-exact outputs."""
+
+    cfg = get_config("smollm-135m").reduced().replace(
+        logits_dtype="float32")
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    srv = Server(api, params, batch=2, context=32, paged=True,
+                 page_size=8, kv_pages=4)
+    p1, p2 = list(range(1, 21)), list(range(1, 15))
+    r1 = srv.submit(p1, max_new=4)
+    r2 = srv.submit(p2, max_new=4)
+    srv.run_until_drained()
+    assert r1.done and r2.done
+    assert srv.deferrals >= 1                    # the pool really choked
+    assert r1.out == _solo_out(api, params, p1, 4)
+    assert r2.out == _solo_out(api, params, p2, 4)
+
+
+def test_paged_sliding_window_trims_dead_pages():
+    """SWA reclamation: pages that fell wholly out of the window free
+    mid-request, so a long SWA request occupies O(window), not O(len)."""
+
+    cfg = get_config("smollm-135m").reduced().replace(
+        logits_dtype="float32", window=8)
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    srv = Server(api, params, batch=1, context=32, paged=True,
+                 page_size=4, prefill_chunk=4)
+    prompt = list(range(1, 25))
+    req = srv.submit(prompt, max_new=4)
+    peak = 0
+    while not req.done:
+        srv.tick()
+        peak = max(peak, srv.alloc.used_pages)
+    # window=8 at page_size=4 needs at most 3 live pages (window spans
+    # at most ceil(w/ps)+1 partially-filled pages)
+    assert peak <= 3
+    assert req.out == _solo_out(api, params, prompt, 4, prefill_chunk=4)
+
+
+def test_paged_slot_reuse_after_retire():
+    """Retired slots release pages and a reused slot starts clean."""
+
+    cfg = get_config("smollm-135m").reduced().replace(
+        logits_dtype="float32")
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    srv = Server(api, params, batch=1, context=32, paged=True, page_size=8)
+    prompt = list(range(1, 13))
+    r1 = srv.submit(prompt, max_new=3)
+    srv.run_until_drained()
+    assert srv.alloc.used_pages == 0             # retire released all
+    r2 = srv.submit(prompt, max_new=3)
+    srv.run_until_drained()
+    assert r1.out == r2.out
+
+
+# ---------------------------------------------------------------------------
+# KVPageTunable
+# ---------------------------------------------------------------------------
+
+
+def test_kv_page_tunable_space_and_cost_tradeoff():
+    tb = KVPageTunable(param_bytes=1 << 22, layers=2, d_model=64,
+                       kv_width=32, context=256, prompt_lens=(16, 200),
+                       requests=16, mean_new=16, batch=8, pool_tokens=512)
+    pages = [c["page"] for c in tb.space()]
+    assert pages == [4, 8, 16, 32, 64, 128]
+    costs = {ps: tb.cost({"page": ps}) for ps in pages}
+    best = min(costs, key=costs.get)
+    # a genuine tradeoff: the optimum is interior — tiny pages lose to
+    # gather overhead, huge pages lose to fragmentation waste
+    assert best not in (pages[0], pages[-1])
+    fp = tb.fingerprint()
+    assert fp["tunable"] == "serve.kv_page" and fp["unit"] == "us"
+    assert fp["prompt_lens"] == [16, 200]
+    assert "api" not in fp and "params" not in fp
+
+
+def test_kv_page_tunable_measure_requires_model():
+    tb = KVPageTunable(param_bytes=1 << 20, layers=2, d_model=64,
+                       kv_width=32, context=32, prompt_lens=(8,),
+                       requests=2, mean_new=2, batch=1)
+    with pytest.raises(RuntimeError, match="api=/params="):
+        tb.measure({"page": 8})
+
+
+def test_kv_page_plan_roundtrip_zero_engine_runs(tmp_path):
+    """Acceptance slice: ``serve.kv_page`` resolves from a warmed cache
+    through a pure-JSON plan spec with ZERO engine runs (api/params
+    handles excluded from the fingerprint)."""
+
+    from repro.runtime.serve import kv_page_tunable
+    from repro.tune import TuningCache, TuningPlan, tune
+
+    cfg = get_config("smollm-135m").reduced().replace(
+        logits_dtype="float32")
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    cache = TuningCache(tmp_path / "c.json")
+
+    tb = kv_page_tunable(api, context=32, prompt_lens=[4, 12], requests=2,
+                         max_new=2, batch=2, params=params)
+    res = tune(tb, engine="measure", cache=cache, budget=1, repeats=1)
+    assert res.stats["provenance"] == "measured"
+
+    spec = {"name": "kv-warmup", "jobs": [
+        {"tunable": "serve.kv_page",
+         "params": {"param_bytes": api.param_count() * 2,
+                    "layers": cfg.n_layers, "d_model": cfg.d_model,
+                    "kv_width": cfg.n_kv_heads * cfg.hd, "context": 32,
+                    "prompt_lens": [4, 12], "requests": 2, "mean_new": 2,
+                    "batch": 2},
+         "engine": "measure",
+         "engine_kwargs": {"budget": 1, "repeats": 1}}]}
+    report = TuningPlan.from_spec(spec).run(cache=cache)
+    assert report.ok and report.results[0].status == "hit"
+    assert report.results[0].provenance == "measured"
+    assert report.results[0].best_config == dict(res.best_config)

@@ -9,7 +9,8 @@ import pytest
 from repro.configs import get_config
 from repro.models import build_model
 from repro.runtime.serve import (DecodeBatchTunable, PrefillChunkTunable,
-                                 Server, choose_batch, choose_prefill_chunk,
+                                 Server, choose_batch, choose_kv_page,
+                                 choose_prefill_chunk,
                                  prefill_chunk_tunable)
 
 
@@ -386,6 +387,23 @@ def test_decode_batch_tunable_measure_requires_model():
     import pytest
     with pytest.raises(RuntimeError, match="api=/params="):
         tb.measure({"batch": 1})
+
+
+def test_choose_kv_page_measure_engine_times_real_paged_drains():
+    """``engine="measure"`` refines the modeled page size against real
+    mixed-length PAGED ``Server`` drains, provenance-tagged — the same
+    contract as the slot-count and prefill-chunk tunables."""
+
+    cfg, api, params, _ = make()
+    page, res = choose_kv_page(api, context=32, prompt_lens=[4, 12],
+                               requests=3, max_new=2, batch=2,
+                               params=params, engine="measure",
+                               cache=None, budget=2, repeats=1)
+    assert res.stats["provenance"] == "measured"
+    assert res.t_min > 0.0
+    assert page == res.best_config["page"]
+    assert res.stats["measured_pick"]["measured"] <= \
+        res.stats["modeled_pick"]["measured"]
 
 
 def test_encdec_serving_with_encoder_prefill():

@@ -99,6 +99,35 @@ def test_plan_run_flushes_cache(tmp_path):
     assert path.exists() and not cache.dirty    # warm-up persisted
 
 
+def test_plan_parallel_run_matches_serial(tmp_path):
+    """``workers=N`` must be a pure throughput knob: same jobs, same
+    plan-order results, same statuses and picks as the serial run —
+    including per-job failure isolation inside worker threads."""
+
+    def bad_factory():
+        raise RuntimeError("boom in a worker")
+
+    def build_plan():
+        plan = TuningPlan(name="par")
+        for ident in ("a", "b", "c", "d"):
+            plan.add(CountingTunable(ident), engine="grid")
+        plan.add(bad_factory, engine="grid", label="bad")
+        return plan
+
+    serial = build_plan().run(cache=TuningCache(tmp_path / "s.json"))
+    parallel = build_plan().run(cache=TuningCache(tmp_path / "p.json"),
+                                workers=4)
+    assert parallel.counts == serial.counts
+    assert parallel.counts["failed"] == 1 and parallel.counts["tuned"] == 4
+    for sr, pr in zip(serial.results, parallel.results):
+        assert (sr.label, sr.status, sr.best_config) == \
+            (pr.label, pr.status, pr.best_config)
+    # parallel warm-up persisted like the serial one: a serial re-run
+    # over the parallel-warmed cache is 100% hits
+    rerun = build_plan().run(cache=TuningCache(tmp_path / "p.json"))
+    assert rerun.counts["hits"] == 4
+
+
 def test_plan_from_spec_grid_expansion_and_labels(tmp_path):
     spec = {"name": "s", "jobs": [
         {"tunable": "kernels.tuned_reduction", "grid": {"n": [4096, 8192]},
@@ -272,6 +301,99 @@ def test_artifact_prefer_measured_policy(tmp_path):
     rep2 = modeled.merge_artifact(art)
     assert rep2["kept"] == 1 and rep2["replaced"] == 0
     assert modeled.entries[key_mod]["provenance"] == "measured"
+
+
+def test_artifact_provenance_meta_travels_with_entries(tmp_path, capsys):
+    """Export stamps host/tool/timestamp provenance on the bundle;
+    merge surfaces it in the report and onto every entry it takes as
+    ``origin``; ``ls --json`` shows it — "where did this config come
+    from" survives the bundle file itself."""
+
+    src = _warm_cache(tmp_path, "src.json", [CountingTunable("a")])
+    art = tmp_path / "a.json"
+    bundle = src.export_artifact(art)
+    meta = bundle["meta"]
+    assert meta["host"] and meta["python"] and meta["created_utc"]
+    assert meta["tool"].startswith("repro ")
+
+    dst = TuningCache(tmp_path / "dst.json")
+    report = dst.merge_artifact(art)
+    assert report["meta"] == meta
+    (entry,) = dst.entries.values()
+    assert entry["origin"] == meta
+    dst.save()
+
+    assert cli_main(["--cache", str(tmp_path / "dst.json"),
+                     "ls", "--json"]) == 0
+    rows = json.loads(capsys.readouterr().out)
+    assert rows[0]["origin"] == meta
+
+    # locally tuned entries carry no origin
+    (local_entry,) = src.entries.values()
+    assert "origin" not in local_entry
+
+    # relayed bundles keep the ORIGINAL origin: re-export from the node
+    # and merge into a third cache — the entry still answers with the
+    # first exporter, not the relay host
+    (key,) = dst.entries
+    dst._entries[key]["origin"] = {"host": "the-original-tuner"}
+    art2 = tmp_path / "relay.json"
+    dst.export_artifact(art2)
+    dst2 = TuningCache(tmp_path / "dst2.json")
+    dst2.merge_artifact(art2)
+    assert dst2.entries[key]["origin"] == {"host": "the-original-tuner"}
+
+
+def test_plan_parallel_serializes_timed_jobs(tmp_path):
+    """Wall-clock-sensitive jobs (engine="measure", meta jobs) must not
+    share the machine with pooled jobs: they run serially AFTER the
+    pool drains, so their timings never sample a neighbour's load —
+    while the report keeps plan order."""
+
+    import threading
+    events: list[str] = []
+    lock = threading.Lock()
+
+    class Tracker(CountingTunable):
+        def __init__(self, ident, tag):
+            super().__init__(ident)
+            self.tag = tag
+
+        def cost(self, cfg):
+            with lock:
+                events.append(self.tag)
+            return super().cost(cfg)
+
+        def measure(self, cfg):
+            with lock:
+                events.append(self.tag)
+            return 1.0
+
+    plan = TuningPlan(name="timed")
+    plan.add(Tracker("m", "timed"), engine="measure", budget=1, repeats=1)
+    plan.add(Tracker("a", "pooled"), engine="grid")
+    plan.add(Tracker("b", "pooled"), engine="grid")
+    assert [j.timed for j in plan.jobs] == [True, False, False]
+
+    report = plan.run(cache=TuningCache(tmp_path / "c.json"), workers=4)
+    assert report.ok
+    # report order is plan order; execution put the timed job LAST
+    assert [r.label for r in report.results][0] == "test.counting"
+    first_timed = events.index("timed")
+    assert all(e == "timed" for e in events[first_timed:])
+
+    # spec-built meta jobs classify as timed without materializing
+    spec = {"jobs": [
+        {"tunable": "meta.engine",
+         "params": {"engine": "measure",
+                    "inner": {"tunable": "kernels.tuned_reduction",
+                              "params": {"n": 4096}},
+                    "space": {"top_k": [1], "repeats": [1]}},
+         "engine": "grid"},
+        {"tunable": "kernels.tuned_reduction", "params": {"n": 4096},
+         "engine": "grid"}]}
+    from_spec = TuningPlan.from_spec(spec)
+    assert [j.timed for j in from_spec.jobs] == [True, False]
 
 
 def test_artifact_stale_schema_rejected(tmp_path):
