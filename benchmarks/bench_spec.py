@@ -1,0 +1,151 @@
+"""Speculative vs one-token decoding: engine ticks per generated token.
+
+Baseline decode pays one engine tick — one full weight stream — per
+generated token per wave.  Speculative decoding
+(:class:`~repro.runtime.serve.Server` ``speculate=``) drafts ``depth``
+candidates, verifies all of them plus a bonus token in one chunk
+forward, and emits the accepted prefix — so a tick can yield up to
+``depth + 1`` tokens, and the ticks-per-token ratio falls with the
+drafter's acceptance rate.  This benchmark drains the same workload
+through baseline, n-gram (prompt-lookup) and self-draft (draft model =
+target — the 100%-acceptance upper bound) speculation, contiguous and
+paged, and prints ticks, ticks/token, accept rate, and wall-clock —
+then lets ``repro.tune`` price the depth × drafter lattice through the
+same modeled-cost path the fleet uses
+(:class:`~repro.runtime.speculate.SpecDepthTunable`,
+``serve.spec_depth``).
+
+Repetitive prompts (a short cycled pattern) give the n-gram drafter the
+lookup structure real templated traffic has; acceptance there depends
+on what the random-weight model actually argmaxes, so the self-draft
+rows are the guaranteed fewer-ticks demonstration.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.runtime.serve import Server
+from repro.runtime.speculate import spec_depth_tunable
+from repro.tune import tune
+
+SMOKE = dict(prompt_len=8, requests=4, max_new=10, slots=2, context=40,
+             spec_depth=4, prefill_chunk=8, page_size=8)
+FULL = dict(prompt_len=32, requests=12, max_new=24, slots=4, context=96,
+            spec_depth=4, prefill_chunk=16, page_size=16)
+
+
+def _prompts(vocab: int, *, prompt_len: int, requests: int,
+             period: int = 4) -> list[list[int]]:
+    return [[(r + i % period) % (vocab - 1) + 1 for i in range(prompt_len)]
+            for r in range(requests)]
+
+
+def _drain(api, params, prompts, *, max_new, prefill_chunk,
+           **srv_kw) -> dict:
+    def load():
+        srv = Server(api, params, prefill_chunk=prefill_chunk, **srv_kw)
+        for p in prompts:
+            srv.submit(p, max_new=max_new)
+        return srv
+
+    load().run_until_drained()            # warmup: absorb jit compiles
+    srv = load()
+    t0 = time.perf_counter()
+    srv.run_until_drained()
+    wall = time.perf_counter() - t0
+    st = srv.stats()
+    outs = sorted((r.rid, tuple(r.out)) for r in srv.completed)
+    return {"ticks": int(st["ticks"]), "tokens": int(st["tokens_generated"]),
+            "tpt": st["ticks_per_token"], "accept": st["accept_rate"],
+            "wall": wall, "tok_s": st["tokens_generated"] / max(wall, 1e-9),
+            "outs": outs}
+
+
+def run(csv: list[str], *, arch: str = "smollm-135m", prompt_len: int = 8,
+        requests: int = 4, max_new: int = 10, slots: int = 2,
+        context: int = 40, spec_depth: int = 4, prefill_chunk: int = 8,
+        page_size: int = 8) -> None:
+    print("\n== speculative vs one-token decode: ticks per token ==")
+    cfg = get_config(arch).reduced().replace(logits_dtype="float32")
+    api = build_model(cfg)
+    # float32 end-to-end: random reduced models at bfloat16 produce
+    # exact logit ties, and a tie flips on the ulp-level cache noise a
+    # different commit schedule leaves behind — the parity check below
+    # needs the model's real logit gaps (Server mirrors the params'
+    # dtype into its KV cache)
+    params = jax.tree_util.tree_map(
+        lambda a: a.astype(jnp.float32), api.init(jax.random.PRNGKey(0)))
+    prompts = _prompts(cfg.vocab, prompt_len=prompt_len, requests=requests)
+    print(f"{arch} (reduced): {requests} requests x {prompt_len}-token "
+          f"prompts + {max_new} new, {slots} slots, depth={spec_depth}")
+
+    cases = []
+    for paged in (False, True):
+        pk = dict(paged=True, page_size=page_size) if paged else {}
+        mode = "paged" if paged else "contig"
+        cases += [
+            (f"{mode}_baseline", dict(**pk)),
+            (f"{mode}_ngram", dict(speculate="ngram",
+                                   spec_depth=spec_depth, **pk)),
+            (f"{mode}_draft", dict(speculate="draft",
+                                   spec_depth=spec_depth, **pk)),
+        ]
+    hdr = (f"  {'configuration':<18} {'ticks':>6} {'tokens':>7} "
+           f"{'ticks/tok':>9} {'accept':>7} {'wall_ms':>8} {'tok/s':>7}")
+    print(hdr)
+    rows = {}
+    for tag, kw in cases:
+        r = _drain(api, params, prompts, max_new=max_new,
+                   prefill_chunk=prefill_chunk, batch=slots,
+                   context=context, **kw)
+        rows[tag] = r
+        print(f"  {tag:<18} {r['ticks']:>6} {r['tokens']:>7} "
+              f"{r['tpt']:>9.3f} {r['accept']:>7.2f} "
+              f"{r['wall'] * 1e3:>8.1f} {r['tok_s']:>7.1f}")
+        csv.append(f"spec_{tag},{r['wall'] * 1e6 / max(r['ticks'], 1):.1f},"
+                   f"ticks={r['ticks']};tokens={r['tokens']};"
+                   f"ticks_per_token={r['tpt']:.3f};"
+                   f"accept={r['accept']:.2f}")
+
+    # greedy speculation must be a pure schedule change — same tokens
+    for mode in ("contig", "paged"):
+        base = rows[f"{mode}_baseline"]
+        for drafter in ("ngram", "draft"):
+            r = rows[f"{mode}_{drafter}"]
+            assert r["outs"] == base["outs"], \
+                f"{mode}_{drafter} diverged from baseline decode"
+            assert r["ticks"] <= base["ticks"]
+        assert rows[f"{mode}_draft"]["ticks"] < base["ticks"], \
+            "self-draft speculation did not save engine ticks"
+    print(f"  -> outputs token-for-token identical; self-draft decode "
+          f"runs {rows['contig_draft']['tpt']:.2f} ticks/token vs "
+          f"{rows['contig_baseline']['tpt']:.2f} baseline")
+
+    # the tuned policy, through the same modeled-cost path the fleet uses
+    tb = spec_depth_tunable(api, context=context, prompt_len=prompt_len,
+                            requests=requests, max_new=max_new, batch=slots,
+                            params=params)
+    res = tune(tb, engine="grid", cache=None)
+    print(f"  modeled pick: depth={res.best_config['depth']} "
+          f"drafter={res.best_config['drafter']} "
+          f"(drain {res.t_min / 1e3:.1f} ms modeled)")
+    csv.append(f"spec_tuned,{res.t_min:.1f},"
+               f"depth={res.best_config['depth']};"
+               f"drafter={res.best_config['drafter']}")
+
+
+def main() -> None:
+    csv: list[str] = []
+    run(csv, **FULL)
+    for line in csv:
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

@@ -4,17 +4,55 @@ end (per-benchmark sections print richer tables above).
 
 ``--smoke`` runs a CI-sized subset: one distributed-tuning cell through
 the full ``repro.tune`` path (grid engine + cache hit/miss) plus the
-Table 3 model sweep — end-to-end tuning in well under a minute.
+Table 3 model sweep — end-to-end tuning in well under a minute — and
+writes the machine-readable ``BENCH_smoke.json`` (per-bench timings +
+derived counters + wall seconds) that CI uploads as the perf-trajectory
+artifact.
 ``--measure`` runs only the modeled-vs-measured comparison (the
 ``measure`` engine on real kernels, interpret mode on CPU, tiny shapes).
 ``--prefill`` runs only the chunked-vs-tokenwise serving prefill drain.
 ``--paged`` runs only the paged-vs-contiguous KV cache drain.
+``--spec`` runs only the speculative-vs-one-token decode drain.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
+
+
+def _csv_to_json(csv: list[str], wall_s: float) -> dict:
+    """The machine-readable form of the harness CSV: one entry per
+    benchmark row, ``derived``'s ``k=v;k=v`` payload split out (numbers
+    parsed) so trend tooling can diff runs without string munging."""
+
+    entries = []
+    for line in csv:
+        parts = line.split(",", 2)
+        name = parts[0]
+        us = parts[1] if len(parts) > 1 else ""
+        derived = parts[2] if len(parts) > 2 else ""
+        entry: dict = {"name": name}
+        try:
+            entry["us_per_call"] = float(us)
+        except ValueError:
+            entry["us_per_call"] = us
+        parsed: dict = {}
+        for kv in derived.split(";"):
+            if "=" in kv:
+                k, v = kv.split("=", 1)
+                try:
+                    parsed[k] = float(v) if "." in v or "e" in v.lower() \
+                        else int(v)
+                except ValueError:
+                    parsed[k] = v
+            elif kv:
+                parsed.setdefault("notes", []).append(kv)
+        if parsed:
+            entry["derived"] = parsed
+        entries.append(entry)
+    return {"wall_s": round(wall_s, 3), "benchmarks": entries}
 
 
 def main(argv=None) -> None:
@@ -27,11 +65,17 @@ def main(argv=None) -> None:
                     help="chunked-vs-tokenwise serving prefill drain only")
     ap.add_argument("--paged", action="store_true",
                     help="paged-vs-contiguous KV cache drain only")
+    ap.add_argument("--spec", action="store_true",
+                    help="speculative-vs-one-token decode drain only")
+    ap.add_argument("--json-out", default=None,
+                    help="write the CSV as machine-readable JSON here "
+                         "(default BENCH_smoke.json with --smoke)")
     args = ap.parse_args(argv)
 
     from benchmarks import (bench_measure, bench_paged, bench_prefill,
-                            bench_roofline, bench_sweep, bench_table1,
-                            bench_table2, bench_table3, bench_tpu_tuning)
+                            bench_roofline, bench_spec, bench_sweep,
+                            bench_table1, bench_table2, bench_table3,
+                            bench_tpu_tuning)
 
     csv: list[str] = []
     t0 = time.perf_counter()
@@ -41,6 +85,8 @@ def main(argv=None) -> None:
         bench_prefill.run(csv, **bench_prefill.SMOKE)
     elif args.paged:
         bench_paged.run(csv, **bench_paged.SMOKE)
+    elif args.spec:
+        bench_spec.run(csv, **bench_spec.SMOKE)
     elif args.smoke:
         bench_table3.run(csv)
         bench_tpu_tuning.run(csv, cells=[("minitron-8b", "train_4k", 1)])
@@ -48,6 +94,7 @@ def main(argv=None) -> None:
         bench_measure.run(csv)
         bench_prefill.run(csv, **bench_prefill.SMOKE)
         bench_paged.run(csv, **bench_paged.SMOKE)
+        bench_spec.run(csv, **bench_spec.SMOKE)
     else:
         bench_table1.run(csv)
         bench_table2.run(csv)
@@ -60,6 +107,7 @@ def main(argv=None) -> None:
                           top_k=4, repeats=3)
         bench_prefill.run(csv, **bench_prefill.FULL)
         bench_paged.run(csv, **bench_paged.FULL)
+        bench_spec.run(csv, **bench_spec.FULL)
         bench_roofline.run(csv)
     dt = time.perf_counter() - t0
 
@@ -67,6 +115,13 @@ def main(argv=None) -> None:
     for line in csv:
         print(line)
     print(f"\ntotal benchmark wall time: {dt:.1f}s")
+
+    json_out = args.json_out or ("BENCH_smoke.json" if args.smoke else None)
+    if json_out:
+        with open(json_out, "w") as f:
+            json.dump(_csv_to_json(csv, dt), f, indent=2)
+            f.write("\n")
+        print(f"wrote {json_out}")
 
 
 if __name__ == "__main__":

@@ -17,6 +17,7 @@ from ..configs import get_config
 from ..models import build_model
 from ..runtime.serve import (Server, decode_batch_tunable, kv_page_tunable,
                              prefill_chunk_tunable)
+from ..runtime.speculate import DRAFTER_KINDS, spec_depth_tunable
 
 
 def main(argv=None) -> None:
@@ -38,6 +39,12 @@ def main(argv=None) -> None:
     ap.add_argument("--kv-pages", type=int, default=None,
                     help="pool size in pages (default: full per-slot "
                          "backing, batch * ceil(context/page))")
+    ap.add_argument("--speculate", choices=list(DRAFTER_KINDS), default=None,
+                    help="speculative decoding drafter: 'ngram' "
+                         "(prompt-lookup, free) or 'draft' (self-draft "
+                         "model rollout)")
+    ap.add_argument("--spec-depth", type=int, default=4,
+                    help="draft tokens verified per speculative tick")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--tune-batch", action="store_true",
                     help="pick the slot count via repro.tune")
@@ -46,10 +53,14 @@ def main(argv=None) -> None:
     ap.add_argument("--tune-page", action="store_true",
                     help="pick the KV page size via repro.tune "
                          "(implies --paged)")
+    ap.add_argument("--tune-spec", action="store_true",
+                    help="pick the speculation policy (depth x drafter) "
+                         "via repro.tune (implies speculation)")
     ap.add_argument("--tune-engine", default="grid",
                     help="tuning engine for --tune-batch/--tune-prefill/"
-                         "--tune-page; 'measure' refines the modeled pick "
-                         "with real server drains (wall-clock)")
+                         "--tune-page/--tune-spec; 'measure' refines the "
+                         "modeled pick with real server drains "
+                         "(wall-clock)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -65,12 +76,13 @@ def main(argv=None) -> None:
         job = plan.run(progress=None).results[0]
         if job.status == "failed":
             raise RuntimeError(f"--tune-{label} failed: {job.error}")
-        picked = int(job.best_config[key])
-        print(f"[tune] {key}={picked} "
+        picked = dict(job.best_config)
+        shown = ",".join(f"{k}={v}" for k, v in sorted(picked.items()))
+        print(f"[tune] {shown} "
               f"{job.provenance or 'modeled'} drain="
               f"{job.t_min / 1e3:.1f} ms (engine={job.engine}, "
               f"cache {job.status})")
-        return picked
+        return picked if key is None else int(picked[key])
 
     batch = args.batch
     prefill_chunk = args.prefill_chunk
@@ -96,10 +108,22 @@ def main(argv=None) -> None:
                              requests=args.requests, max_new=args.max_new,
                              batch=batch, params=params)
         page_size = run_job(tk, "page", "page")
+    speculate = args.speculate
+    spec_depth = args.spec_depth
+    if args.tune_spec:
+        ts = spec_depth_tunable(api, context=args.context,
+                                prompt_len=args.prompt_len,
+                                requests=args.requests,
+                                max_new=args.max_new, batch=batch,
+                                params=params)
+        picked = run_job(ts, "spec", None)
+        spec_depth = int(picked["depth"])
+        speculate = str(picked["drafter"])
 
     server = Server(api, params, batch=batch, context=args.context,
                     prefill_chunk=prefill_chunk, paged=paged,
-                    page_size=page_size, kv_pages=args.kv_pages)
+                    page_size=page_size, kv_pages=args.kv_pages,
+                    speculate=speculate, spec_depth=spec_depth)
     rng = np.random.default_rng(args.seed)
     for _ in range(args.requests):
         prompt = rng.integers(0, cfg.vocab, args.prompt_len).tolist()
@@ -125,6 +149,13 @@ def main(argv=None) -> None:
               f"peak_used={st['peak_used_pages']:.0f} "
               f"peak_active={st['peak_active']:.0f} "
               f"deferrals={st['deferrals']:.0f}")
+    if speculate is not None:
+        st = server.stats()
+        print(f"  speculation: drafter={speculate} depth={spec_depth} "
+              f"proposed={st['spec_proposed']:.0f} "
+              f"accepted={st['spec_accepted']:.0f} "
+              f"(accept_rate={st['accept_rate']:.2f}) "
+              f"ticks/token={st['ticks_per_token']:.2f}")
     for r in done[:3]:
         print(f"  req{r.rid}: prompt={r.prompt[:4]}... out={r.out}")
 

@@ -77,7 +77,7 @@ class ModelAPI:
 
     # -- decode ---------------------------------------------------------
     def decode_block_specs(self, batch: int, context: int,
-                           paged: Any = None) -> dict:
+                           paged: Any = None, dtype: Any = None) -> dict:
         """Decode state of ONE block (unstacked) — also used by the
         dry-run's block-level cost lowering.
 
@@ -86,7 +86,10 @@ class ModelAPI:
         becomes ``(n_pages, Hkv, page_size, hd)`` and slots address it
         through the page table fed to :meth:`decode_step` /
         :meth:`prefill_step`.  Recurrent (SSM) and cross/encoder state
-        stay per-slot: they are O(1) in context, paging buys nothing."""
+        stay per-slot: they are O(1) in context, paging buys nothing.
+        ``dtype`` overrides the KV storage dtype (default bfloat16) —
+        pass the params' dtype to keep a float32 model float32 through
+        the cache."""
 
         cfg = self.cfg
         kinds, _ = _block_plan(cfg)
@@ -96,11 +99,14 @@ class ModelAPI:
             entry: dict[str, Any] = {}
             if kind in ("dense", "moe", "hybrid", "encoder"):
                 entry["kv"] = (attn.kv_pool_specs(cfg, paged.n_pages,
-                                                  paged.page_size)
+                                                  paged.page_size,
+                                                  dtype=dtype)
                                if paged is not None
-                               else attn.kv_cache_specs(cfg, batch, C))
+                               else attn.kv_cache_specs(cfg, batch, C,
+                                                        dtype=dtype))
             if kind in ("ssm", "hybrid"):
-                entry["ssm"] = ssm_mod.ssm_state_specs(cfg, batch)
+                entry["ssm"] = ssm_mod.ssm_state_specs(cfg, batch,
+                                                       dtype=dtype)
             if kind == "cross":
                 Hkv, hd = cfg.n_kv_heads, cfg.hd
                 entry["enc_kv"] = {
@@ -114,10 +120,10 @@ class ModelAPI:
         return per_block
 
     def decode_state_specs(self, batch: int, context: int,
-                           paged: Any = None) -> dict:
+                           paged: Any = None, dtype: Any = None) -> dict:
         cfg = self.cfg
         _, n_blocks = _block_plan(cfg)
-        per_block = self.decode_block_specs(batch, context, paged)
+        per_block = self.decode_block_specs(batch, context, paged, dtype)
         state: dict[str, Any] = {"blocks": stack_specs(per_block, n_blocks)}
         if cfg.is_encdec:
             Hkv, hd = cfg.n_kv_heads, cfg.hd
@@ -130,8 +136,10 @@ class ModelAPI:
             state["xattn"] = stack_specs(xkv, cfg.n_layers)
         return state
 
-    def init_decode_state(self, batch: int, context: int, paged: Any = None):
-        return init_params(self.decode_state_specs(batch, context, paged),
+    def init_decode_state(self, batch: int, context: int, paged: Any = None,
+                          dtype: Any = None):
+        return init_params(self.decode_state_specs(batch, context, paged,
+                                                   dtype),
                            jax.random.PRNGKey(0))
 
     def decode_step(self, params, state, tokens: jax.Array,
@@ -191,6 +199,43 @@ class ModelAPI:
         distribution a tokenwise prefill would reach after feeding the
         same tokens one tick at a time."""
 
+        x, new_state, lengths = self._chunk_forward(
+            params, state, tokens, positions, lengths, page_table)
+        # logits only at each slot's last valid token: (B, T, V) never
+        # materializes
+        li = jnp.clip(lengths - 1, 0, x.shape[1] - 1)
+        h_last = jnp.take_along_axis(x, li[:, None, None], axis=1)
+        logits = _logits(params, self.cfg, h_last)[:, 0]
+        return logits, new_state
+
+    def verify_step(self, params, state, tokens: jax.Array,
+                    positions: jax.Array, lengths: jax.Array | None = None,
+                    page_table: jax.Array | None = None):
+        """Speculative-decode verifier: the chunked prefill forward with
+        logits at EVERY chunk position instead of only the last.
+
+        Same contract as :meth:`prefill_step` — tokens (B, T) at
+        absolute positions ``positions + [0, T)``, per-slot ``lengths``
+        gating writes — but returns ``(logits (B, T, V), new state)``:
+        ``logits[b, t]`` is the next-token distribution after token
+        ``t``, so comparing ``argmax(logits[b, t])`` against the drafted
+        token at ``t+1`` scores a whole draft in one forward.  Callers
+        DISCARD the returned state (it contains the rejected tokens'
+        cache writes) and commit the accepted prefix with a second
+        ``prefill_step(lengths=accepted)`` — the only uniform way to
+        keep recurrent (SSM/hybrid) state exact under partial
+        acceptance.  Positions past ``lengths`` hold garbage logits."""
+
+        x, new_state, _ = self._chunk_forward(
+            params, state, tokens, positions, lengths, page_table)
+        return _logits(params, self.cfg, x), new_state
+
+    def _chunk_forward(self, params, state, tokens, positions, lengths,
+                       page_table):
+        """Shared multi-token cached forward under ``prefill_step`` and
+        ``verify_step``: embed + chunk-attention scan over the blocks.
+        Returns ``(hidden (B, T, d), new state, lengths (B,))``."""
+
         cfg = self.cfg
         kinds, _ = _block_plan(cfg)
         B, T = tokens.shape
@@ -213,14 +258,9 @@ class ModelAPI:
         else:
             xs = (params["blocks"], state["blocks"])
         x, new_blocks = jax.lax.scan(body, x, xs)
-        # logits only at each slot's last valid token: (B, T, V) never
-        # materializes
-        li = jnp.clip(lengths - 1, 0, T - 1)
-        h_last = jnp.take_along_axis(x, li[:, None, None], axis=1)
-        logits = _logits(params, cfg, h_last)[:, 0]
         new_state = dict(state)
         new_state["blocks"] = new_blocks
-        return logits, new_state
+        return x, new_state, lengths
 
     def encode_cross_kv(self, params, frames: jax.Array) -> dict:
         """Enc-dec serving prefill: run the encoder and project per-layer

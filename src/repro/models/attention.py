@@ -18,7 +18,7 @@ import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
 from ..distribute.sharding import logical_constraint as lc
-from .common import PSpec, rms_norm, rope
+from .common import DEFAULT_DTYPE, PSpec, rms_norm, rope
 
 NEG_INF = -1e30
 
@@ -197,18 +197,23 @@ def attention(p: dict, cfg: ArchConfig, x: jax.Array, positions: jax.Array,
 # ---------------------------------------------------------------------------
 
 
-def kv_cache_specs(cfg: ArchConfig, batch: int, cache_len: int) -> dict:
+def kv_cache_specs(cfg: ArchConfig, batch: int, cache_len: int,
+                   dtype: Any = None) -> dict:
     # cache_seq -> "model" keeps 32k caches shardable even when kv_heads
     # do not divide the model axis (GQA kv=8 on 16-way TP); the axis
-    # dedup keeps whichever dim claims "model" first.
+    # dedup keeps whichever dim claims "model" first.  ``dtype`` lets
+    # callers match the cache to the params' compute dtype (a float32
+    # model wants float32 K/V — quantizing through bfloat16 costs exact
+    # greedy-parity guarantees downstream consumers rely on).
     Hkv, hd = cfg.n_kv_heads, cfg.hd
+    dt = dtype if dtype is not None else DEFAULT_DTYPE
     return {
         "k": PSpec((batch, Hkv, cache_len, hd),
                    ("cache_batch", "kv_heads", "cache_seq", "head_dim"),
-                   init="zeros"),
+                   init="zeros", dtype=dt),
         "v": PSpec((batch, Hkv, cache_len, hd),
                    ("cache_batch", "kv_heads", "cache_seq", "head_dim"),
-                   init="zeros"),
+                   init="zeros", dtype=dt),
     }
 
 
@@ -345,21 +350,24 @@ def decode_attention_chunked(p: dict, cfg: ArchConfig, x: jax.Array,
 # ---------------------------------------------------------------------------
 
 
-def kv_pool_specs(cfg: ArchConfig, n_pages: int, page_size: int) -> dict:
+def kv_pool_specs(cfg: ArchConfig, n_pages: int, page_size: int,
+                  dtype: Any = None) -> dict:
     """Paged KV storage for one block: a POOL of ``n_pages`` fixed-size
     pages shared by every serving slot, addressed through per-slot page
     tables (:mod:`repro.runtime.kv`) — the paged sibling of
     :func:`kv_cache_specs`.  Pages play the batch role of the
-    contiguous layout, so they take its sharding axis."""
+    contiguous layout, so they take its sharding axis.  ``dtype`` as in
+    :func:`kv_cache_specs`."""
 
     Hkv, hd = cfg.n_kv_heads, cfg.hd
+    dt = dtype if dtype is not None else DEFAULT_DTYPE
     return {
         "k": PSpec((n_pages, Hkv, page_size, hd),
                    ("cache_batch", "kv_heads", None, "head_dim"),
-                   init="zeros"),
+                   init="zeros", dtype=dt),
         "v": PSpec((n_pages, Hkv, page_size, hd),
                    ("cache_batch", "kv_heads", None, "head_dim"),
-                   init="zeros"),
+                   init="zeros", dtype=dt),
     }
 
 

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
 from ..distribute.sharding import logical_constraint as lc
-from .common import PSpec
+from .common import DEFAULT_DTYPE, PSpec
 
 
 def _dims(cfg: ArchConfig):
@@ -169,14 +169,19 @@ def ssm_forward(p: dict, cfg: ArchConfig, x: jax.Array) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
-def ssm_state_specs(cfg: ArchConfig, batch: int) -> dict:
+def ssm_state_specs(cfg: ArchConfig, batch: int, dtype=None) -> dict:
     di, nh, P, N, W = _dims(cfg)
     conv_ch = di + 2 * N
+    # the conv ring carries activations, so it follows the params' dtype
+    # (the prefill scan's carry must type-match the body's conv output);
+    # the SSM recurrence h stays float32 regardless — accumulation error
+    # compounds over the whole sequence
+    dt = dtype if dtype is not None else DEFAULT_DTYPE
     return {
         "h": PSpec((batch, nh, N, P), ("cache_batch", "heads", None, None),
                    init="zeros", dtype=jnp.float32),
         "conv": PSpec((batch, W - 1, conv_ch), ("cache_batch", None, "mlp"),
-                      init="zeros"),
+                      init="zeros", dtype=dt),
     }
 
 

@@ -7,6 +7,9 @@ from .serve import (DecodeBatchTunable, KVPageTunable, PrefillChunkTunable,
                     choose_prefill_chunk, decode_batch_tunable,
                     kv_page_tunable, prefill_chunk_tunable,
                     timed_server_drain)
+from .speculate import (Drafter, DraftModelDrafter, NGramDrafter,
+                        SpecDepthTunable, choose_spec_depth, make_drafter,
+                        spec_depth_tunable)
 from .train import (TrainConfig, TrainState, abstract_train_state,
                     build_train_step, init_train_state)
 
@@ -16,5 +19,7 @@ __all__ = ["History", "LoopConfig", "SimulatedFailure", "run_training",
            "choose_batch", "choose_prefill_chunk", "choose_kv_page",
            "decode_batch_tunable", "prefill_chunk_tunable",
            "kv_page_tunable", "timed_server_drain",
+           "Drafter", "NGramDrafter", "DraftModelDrafter", "make_drafter",
+           "SpecDepthTunable", "spec_depth_tunable", "choose_spec_depth",
            "TrainConfig", "TrainState", "abstract_train_state",
            "build_train_step", "init_train_state"]

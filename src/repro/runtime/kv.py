@@ -158,6 +158,28 @@ class PagedKVAllocator:
         self._top[slot] = -1
         return len(pages)
 
+    def rewind(self, slot: int, n_tokens: int) -> int:
+        """Roll ``slot`` back so it backs exactly positions
+        ``[0, n_tokens)`` again: free every page above
+        ``pages_needed(n_tokens)`` and LOWER the high-water mark so a
+        later ``ensure`` re-backs those logical pages with fresh
+        physical ones.  This is the speculation-rejection path — pages
+        grabbed for draft tokens the verifier refused must come back
+        immediately, leaving the table byte-identical to a slot that
+        never speculated.  Returns the number freed."""
+
+        keep = self.pages_needed(n_tokens)
+        freed = 0
+        for lp in range(keep, int(self._top[slot]) + 1):
+            page = int(self.page_table[slot, lp])
+            if page != NO_PAGE:
+                self.owner[page] = NO_PAGE
+                self._free.append(page)
+                self.page_table[slot, lp] = NO_PAGE
+                freed += 1
+        self._top[slot] = min(int(self._top[slot]), keep - 1)
+        return freed
+
     def trim(self, slot: int, keep_from_pos: int) -> int:
         """Free pages of ``slot`` holding only positions strictly below
         ``keep_from_pos`` (sliding-window reclamation: positions that

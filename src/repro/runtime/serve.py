@@ -27,6 +27,31 @@ youngest slot (its pages are released and the request requeued for a
 fresh start).  Mixed short/long traffic then shares one memory budget
 instead of stranding ring capacity.  The page size is a tunable
 (:class:`KVPageTunable`, ``serve.kv_page`` in the plan registry).
+
+``speculate=`` adds a third per-tick slot population: decoding slots
+with a draft from a :class:`~repro.runtime.speculate.Drafter` verify
+``depth+1`` candidate tokens in ONE chunk forward
+(:meth:`~repro.models.api.ModelAPI.verify_step` — the chunked-prefill
+machinery as a verifier), accept the longest greedy-matching prefix
+plus the verifier's bonus token, commit exactly the accepted tokens
+with a second gated ``prefill_step``, and in paged mode ``rewind`` the
+pages grabbed for rejected draft positions — so speculating,
+prefilling, and plain-decoding neighbours coexist in one tick and the
+page table stays byte-identical to a never-speculated drain.  Output
+is token-for-token the baseline greedy stream; only the tick schedule
+changes.  (The guarantee is exact up to floating-point argmax ties:
+commit chunks reduce in a different order than one-token decodes, so
+two logits that quantize to the same value — routine for random
+reduced models at bfloat16 — can flip.  The KV cache follows the
+params' dtype, so running float32 params restores real logit gaps and
+with them stable parity.  Parity also requires comparing through the
+same *compiled* steps: every Server for one api shares one set of
+jitted steps — see the cache note in ``__init__`` — because XLA:CPU
+codegen is not bit-reproducible across separate compiles.  And it
+requires that no dispatch ever alias a persistent host buffer the
+engine mutates between ticks — see :func:`_snapshot`.)  Depth ×
+drafter is the ``serve.spec_depth`` tunable
+(:class:`~repro.runtime.speculate.SpecDepthTunable`).
 """
 
 from __future__ import annotations
@@ -45,6 +70,26 @@ from ..models.api import ModelAPI
 from .kv import PagedKVAllocator, PagedKVSpec
 
 
+def _snapshot(a: np.ndarray) -> jax.Array:
+    """Device copy of a host array that is immune to later host writes.
+
+    ``jnp.asarray`` on a small aligned numpy array is ZERO-COPY on the
+    CPU backend: the jax Array aliases the numpy buffer.  Engine
+    dispatches are asynchronous, so handing a step the live
+    ``slot_pos`` / ``page_table`` buffer lets an in-flight executable
+    observe increments the host makes a few lines later — e.g. the
+    speculation commit (whose logits nothing syncs on) reading
+    ``slot_pos`` after ``slot_pos[s] += e`` and scattering the
+    committed tokens one chunk too far, leaving the true rows holding
+    the slot's previous occupant's KV.  The window only opens when the
+    runtime threads are preempted, so the corruption is rare and
+    load-dependent.  Every dispatch that takes a persistent,
+    host-mutated array must go through this copy; per-tick temporaries
+    (``tokens``, ``lengths``, ``commit``, ``mask``) are never written
+    after dispatch and may alias freely."""
+    return jnp.asarray(np.array(a))
+
+
 @dataclass
 class Request:
     rid: int
@@ -52,26 +97,41 @@ class Request:
     max_new: int
     out: list[int] = field(default_factory=list)
     done: bool = False
+    spec_proposed: int = 0      # draft tokens verified for this request
+    spec_accepted: int = 0      # of those, accepted into the output
 
 
 class Server:
     def __init__(self, api: ModelAPI, params, *, batch: int, context: int,
                  prefill_chunk: int = 32, paged: bool = False,
-                 page_size: int = 16, kv_pages: int | None = None):
+                 page_size: int = 16, kv_pages: int | None = None,
+                 speculate: Any = None, spec_depth: int = 4):
         self.api = api
         self.params = params
         self.batch = batch
         self.context = context
         self.prefill_chunk = max(1, min(prefill_chunk, context))
         self.paged = paged
+        self.drafter = None
+        self.spec_depth = max(1, min(spec_depth, context - 1))
+        if speculate is not None:
+            from .speculate import make_drafter
+            self.drafter = make_drafter(speculate, api=api, params=params)
         self.alloc: PagedKVAllocator | None = None
         if paged:
             spec = PagedKVSpec.for_server(context=context,
                                           page_size=page_size,
                                           n_pages=kv_pages, batch=batch)
             self.alloc = PagedKVAllocator(spec, batch)
+        # KV caches follow the params' dtype: a float32 model keeps a
+        # float32 cache (greedy parity under speculation needs the real
+        # logit gaps, not bfloat16-quantized ties), a bfloat16 model
+        # keeps the compact default.
+        pdt = next((leaf.dtype for leaf in jax.tree_util.tree_leaves(params)
+                    if hasattr(leaf, "dtype")
+                    and jnp.issubdtype(leaf.dtype, jnp.floating)), None)
         self.state = api.init_decode_state(
-            batch, context, self.alloc.spec if paged else None)
+            batch, context, self.alloc.spec if paged else None, dtype=pdt)
         self.slot_req: list[Request | None] = [None] * batch
         self.slot_pos = np.zeros(batch, np.int32)   # per-slot token count
         self._slot_dirty = np.zeros(batch, bool)    # retired -> stale state
@@ -80,6 +140,13 @@ class Server:
         self.deferrals = 0          # paged: restarts forced by page OOM
         self.peak_active = 0
         self.peak_used_pages = 0
+        # per-drain counters behind stats()
+        self.ticks = 0
+        self.tokens_generated = 0
+        self.prefill_chunks = 0
+        self.spec_ticks = 0
+        self.spec_proposed = 0
+        self.spec_accepted = 0
         self.queue: list[Request] = []
         self.completed: list[Request] = []
 
@@ -135,8 +202,42 @@ class Server:
             return api.prefill_step(params, state, tokens, positions,
                                     lengths, page_table)
 
-        self._step = jax.jit(step_paged if paged else step)
-        self._prefill_step = jax.jit(pstep_paged if paged else pstep)
+        # speculation verifier: one chunk forward scoring all depth+1
+        # candidate positions.  Its returned STATE is always discarded
+        # (it holds rejected tokens' cache writes); the accepted prefix
+        # is committed by a second, length-gated ``_prefill_step`` call
+        # — the only uniform way to keep SSM/hybrid recurrence exact
+        # under partial acceptance.
+        def vstep(params, state, tokens, positions, lengths):
+            return api.verify_step(params, state, tokens, positions,
+                                   lengths)
+
+        def vstep_paged(params, state, tokens, positions, lengths,
+                        page_table):
+            return api.verify_step(params, state, tokens, positions,
+                                   lengths, page_table)
+
+        # The jitted steps are built once per (api, paged) and SHARED by
+        # every Server in the process (cached on the api object).  This
+        # is a correctness requirement, not a compile-time nicety:
+        # XLA:CPU native codegen is not bit-reproducible across separate
+        # compiles of the same HLO — under CPU contention two jax.jit
+        # calls on identical code can yield executables whose float
+        # rounding differs enough to flip a near-tie argmax — so a
+        # speculative server and its plain-decode baseline must argmax
+        # through the SAME compiled step to be token-for-token
+        # comparable.  jax.jit retraces per batch/context/dtype, so one
+        # cache entry serves all server shapes.
+        cache = getattr(api, "_server_steps", None)
+        if cache is None:
+            cache = {}
+            api._server_steps = cache
+        if paged not in cache:
+            cache[paged] = (
+                jax.jit(step_paged if paged else step),
+                jax.jit(pstep_paged if paged else pstep),
+                jax.jit(vstep_paged if paged else vstep))
+        self._step, self._prefill_step, self._verify_step = cache[paged]
 
     # -- API ----------------------------------------------------------------
     def submit(self, prompt: list[int], max_new: int,
@@ -288,6 +389,53 @@ class Server:
         st["peak_used_pages"] = float(self.peak_used_pages)
         return st
 
+    def stats(self) -> dict[str, float]:
+        """Per-drain engine-counter snapshot: how many ticks the drain
+        took, what they produced, and how speculation performed —
+        surfaced by ``timed_server_drain(stats_out=...)`` so tunable
+        ``measure()`` provenance and the serving benchmarks can record
+        real accept rates next to wall-clock."""
+
+        g = self.tokens_generated
+        return {
+            "ticks": float(self.ticks),
+            "tokens_generated": float(g),
+            "ticks_per_token": (self.ticks / g) if g else 0.0,
+            "prefill_chunks": float(self.prefill_chunks),
+            "deferrals": float(self.deferrals),
+            "peak_active": float(self.peak_active),
+            "spec_ticks": float(self.spec_ticks),
+            "spec_proposed": float(self.spec_proposed),
+            "spec_accepted": float(self.spec_accepted),
+            "accept_rate": (self.spec_accepted / self.spec_proposed
+                            if self.spec_proposed else 0.0),
+        }
+
+    def _propose_drafts(self) -> dict[int, list[int]]:
+        """Host-side draft proposals for this tick's decoding slots.
+        Depth is capped so emission can never overshoot ``max_new`` or
+        the context (cap ``d``: up to ``d+1`` tokens emitted, and the
+        verify chunk writes positions ``pos..pos+d``), making the spec
+        path retire at exactly the baseline stopping point."""
+
+        drafts: dict[int, list[int]] = {}
+        if self.drafter is None:
+            return drafts
+        for s in range(self.batch):
+            req = self.slot_req[s]
+            if req is None or self._phase(s) != "decode":
+                continue
+            pos = int(self.slot_pos[s])
+            cap = min(self.spec_depth,
+                      req.max_new - len(req.out) - 1,
+                      self.context - 2 - pos)
+            if cap < 1:
+                continue
+            d = self.drafter.propose(req.prompt + req.out, cap)[:cap]
+            if d:
+                drafts[s] = [int(t) for t in d]
+        return drafts
+
     def tick(self) -> int:
         """One engine iteration; returns number of active slots.
 
@@ -304,6 +452,7 @@ class Server:
         the tick out."""
 
         self._admit()
+        drafts = self._propose_drafts()
         if self.paged:
             order = sorted((s for s in range(self.batch)
                             if self.slot_req[s] is not None),
@@ -313,7 +462,20 @@ class Server:
                 if req is None:          # deferred as a younger victim
                     continue
                 if self._phase(s) == "decode":
-                    need = int(self.slot_pos[s]) + 1
+                    pos = int(self.slot_pos[s])
+                    if s in drafts:
+                        # opportunistic draft backing: shrink the draft
+                        # to whatever the free list covers WITHOUT
+                        # deferring a neighbour — speculation must
+                        # never evict a slot a plain decode wouldn't
+                        dr = drafts.pop(s)
+                        for dd in range(len(dr), 0, -1):
+                            if self.alloc.ensure(s, pos + dd + 1):
+                                drafts[s] = dr[:dd]
+                                break
+                        if s in drafts:
+                            continue
+                    need = pos + 1
                 else:
                     cur = req._cursor  # type: ignore[attr-defined]
                     n = min(self.prefill_chunk, len(req.prompt) - cur)
@@ -325,9 +487,12 @@ class Server:
         self.peak_active = max(self.peak_active, len(active))
         if not active:
             return 0
+        self.ticks += 1
         decode = [s for s in active if self._phase(s) == "decode"]
+        spec = [s for s in decode if s in drafts]
+        decode = [s for s in decode if s not in drafts]
         prefill = [s for s in active if self._phase(s) == "prefill"]
-        page_table = (jnp.asarray(self.alloc.page_table)
+        page_table = (_snapshot(self.alloc.page_table)
                       if self.paged else None)
 
         if decode:
@@ -339,7 +504,7 @@ class Server:
             extra = (page_table,) if self.paged else ()
             logits, self.state = self._step(self.params, self.state,
                                             jnp.asarray(tokens),
-                                            jnp.asarray(self.slot_pos),
+                                            _snapshot(self.slot_pos),
                                             jnp.asarray(mask), *extra)
             nxt = np.asarray(jnp.argmax(logits, axis=-1))
             for s in decode:
@@ -347,6 +512,58 @@ class Server:
                 req._cursor += 1  # type: ignore[attr-defined]
                 self.slot_pos[s] += 1
                 req.out.append(int(nxt[s]))
+                self.tokens_generated += 1
+                self._retire_if_done(s)
+
+        if spec:
+            # speculation: verify the chunk [pending token, drafts...]
+            # at absolute positions pos..pos+d in one forward, accept
+            # the longest prefix of drafts matching the verifier's own
+            # greedy picks (plus its bonus token), then COMMIT exactly
+            # the accepted tokens with a length-gated prefill_step (the
+            # verify state, rejected writes included, is discarded)
+            D1 = self.spec_depth + 1
+            tokens = np.zeros((self.batch, D1), np.int32)
+            lengths = np.zeros(self.batch, np.int32)
+            for s in spec:
+                dr = drafts[s]
+                tokens[s, 0] = self.slot_req[s].out[-1]
+                tokens[s, 1:1 + len(dr)] = dr
+                lengths[s] = len(dr) + 1
+            extra = (page_table,) if self.paged else ()
+            logits, _ = self._verify_step(
+                self.params, self.state, jnp.asarray(tokens),
+                _snapshot(self.slot_pos), jnp.asarray(lengths), *extra)
+            greedy = np.asarray(jnp.argmax(logits, axis=-1))  # (B, D1)
+            commit = np.zeros(self.batch, np.int32)
+            emitted: dict[int, list[int]] = {}
+            for s in spec:
+                dr = drafts[s]
+                k = 0
+                while k < len(dr) and int(greedy[s, k]) == dr[k]:
+                    k += 1
+                emitted[s] = dr[:k] + [int(greedy[s, k])]
+                commit[s] = k + 1
+                req = self.slot_req[s]
+                req.spec_proposed += len(dr)
+                req.spec_accepted += k
+                self.spec_proposed += len(dr)
+                self.spec_accepted += k
+            _, self.state = self._prefill_step(
+                self.params, self.state, jnp.asarray(tokens),
+                _snapshot(self.slot_pos), jnp.asarray(commit), *extra)
+            self.spec_ticks += 1
+            for s in spec:
+                req = self.slot_req[s]
+                e = int(commit[s])
+                req._cursor += e  # type: ignore[attr-defined]
+                self.slot_pos[s] += e
+                req.out.extend(emitted[s])
+                self.tokens_generated += e
+                if self.paged:
+                    # hand back pages grabbed for rejected positions;
+                    # the table must match a never-speculated drain
+                    self.alloc.rewind(s, int(self.slot_pos[s]))
                 self._retire_if_done(s)
 
         if prefill:
@@ -362,8 +579,9 @@ class Server:
             extra = (page_table,) if self.paged else ()
             logits, self.state = self._prefill_step(
                 self.params, self.state, jnp.asarray(tokens),
-                jnp.asarray(self.slot_pos), jnp.asarray(lengths), *extra)
+                _snapshot(self.slot_pos), jnp.asarray(lengths), *extra)
             nxt = np.asarray(jnp.argmax(logits, axis=-1))
+            self.prefill_chunks += len(prefill)
             for s in prefill:
                 req = self.slot_req[s]
                 n = int(lengths[s])
@@ -371,6 +589,7 @@ class Server:
                 self.slot_pos[s] += n
                 if req._cursor >= len(req.prompt):
                     req.out.append(int(nxt[s]))
+                    self.tokens_generated += 1
                     self._retire_if_done(s)
 
         # sliding-window reclamation: pages whose positions all fell out
@@ -402,14 +621,21 @@ K_AND_V = 2                 # two tensors per layer
 def timed_server_drain(api: ModelAPI, params, *, batch: int, context: int,
                        prompts, max_new: int, prefill_chunk: int = 32,
                        paged: bool = False, page_size: int = 16,
-                       kv_pages: int | None = None, warmup: int = 1,
+                       kv_pages: int | None = None, speculate: Any = None,
+                       spec_depth: int = 4,
+                       stats_out: dict | None = None, warmup: int = 1,
                        iters: int = 1) -> float:
     """Median wall-clock microseconds to drain ``prompts`` (a list of
     token lists) through a fresh :class:`Server` — the one measurement
     harness behind every serving tunable's ``measure(cfg)``
     (:class:`DecodeBatchTunable`, :class:`PrefillChunkTunable`,
-    :class:`KVPageTunable`).  Warmup drains absorb the step compiles
-    for the batch/chunk shape."""
+    :class:`KVPageTunable`, :class:`~repro.runtime.speculate.\
+SpecDepthTunable`).  Warmup drains absorb the step compiles for the
+    batch/chunk shape.  ``speculate``/``spec_depth`` pass through to
+    :class:`Server` (hand a shared Drafter INSTANCE across calls to
+    reuse a draft model's jit cache).  ``stats_out`` (a dict) receives
+    the last drain's :meth:`Server.stats` snapshot — real
+    proposed/accepted counts for measure() provenance."""
 
     from ..kernels.common import time_fn
     prompts = [list(p) for p in prompts]
@@ -417,10 +643,14 @@ def timed_server_drain(api: ModelAPI, params, *, batch: int, context: int,
     def drain() -> None:
         srv = Server(api, params, batch=batch, context=context,
                      prefill_chunk=prefill_chunk, paged=paged,
-                     page_size=page_size, kv_pages=kv_pages)
+                     page_size=page_size, kv_pages=kv_pages,
+                     speculate=speculate, spec_depth=spec_depth)
         for prompt in prompts:
             srv.submit(prompt, max_new=max_new)
         srv.run_until_drained()
+        if stats_out is not None:
+            stats_out.clear()
+            stats_out.update(srv.stats())
 
     return time_fn(drain, warmup=warmup, iters=iters)
 

@@ -55,8 +55,8 @@ from typing import Any, Callable, Mapping, Sequence
 
 from ..core.autotuner import TuneResult
 from ..core.search_space import Param, SearchSpace
-from .api import tune
-from .cache import TuningCache, default_cache, tunable_fingerprint
+from .api import _resolve_engine_name, tune
+from .cache import TuningCache, cache_key, default_cache, tunable_fingerprint
 
 # ---------------------------------------------------------------------------
 # tunable registry (name -> factory), for dict/JSON plan specs
@@ -110,6 +110,7 @@ def _ensure_builtin_factories() -> None:
     from ..kernels.tuned_reduction.ops import ReductionTunable
     from ..runtime.serve import (DecodeBatchTunable, KVPageTunable,
                                  PrefillChunkTunable)
+    from ..runtime.speculate import SpecDepthTunable
     _FACTORIES.setdefault("kernels.matmul_tuned", MatmulTunable)
     _FACTORIES.setdefault("kernels.flash_attention", FlashAttentionTunable)
     _FACTORIES.setdefault("kernels.tuned_reduction", ReductionTunable)
@@ -117,6 +118,7 @@ def _ensure_builtin_factories() -> None:
     _FACTORIES.setdefault("serve.decode_batch", DecodeBatchTunable)
     _FACTORIES.setdefault("serve.prefill_chunk", PrefillChunkTunable)
     _FACTORIES.setdefault("serve.kv_page", KVPageTunable)
+    _FACTORIES.setdefault("serve.spec_depth", SpecDepthTunable)
     _FACTORIES.setdefault("platform", _platform_factory)
     _FACTORIES.setdefault("tpu.distributed", _tpu_distributed_factory)
     _FACTORIES.setdefault("meta.engine", _meta_engine_factory)
@@ -366,14 +368,14 @@ class TuningPlan:
         serially after the pool drains — concurrent drains would sample
         each other's CPU load and could cache a wrong wall-clock winner
         with ``measured`` provenance, which ``prefer_measured`` would
-        then defend fleet-wide.  Per-job error isolation is preserved
-        (one bad job still only fails itself), progress lines arrive in
-        completion order, and the report lists results in PLAN order
-        either way, so serial and parallel runs are comparable job for
-        job.  One caveat: two jobs resolving to the SAME cache key are
-        skip-on-hit deduplicated serially but may both tune when run
-        concurrently (last write wins) — don't rely on intra-plan hits
-        between duplicate modeled jobs."""
+        then defend fleet-wide.  Pooled jobs are grouped by resolved
+        cache key before dispatch and same-key jobs run serially within
+        one pool task (first tunes, the rest hit), so parallel plans
+        get the same intra-plan skip-on-hit dedup as serial ones.
+        Per-job error isolation is preserved (one bad job still only
+        fails itself), progress lines arrive in completion order, and
+        the report lists results in PLAN order either way, so serial
+        and parallel runs are comparable job for job."""
 
         store = default_cache() if cache == "default" else cache
         report = PlanReport(plan=self.name)
@@ -407,16 +409,41 @@ class TuningPlan:
                     f"{jr.error}")
             return jr
 
+        def resolve_key(i: int, job: TuningJob) -> str:
+            # the key tune() will use for this job; a job whose tunable
+            # cannot even be built gets a unique group of its own (the
+            # failure is then recorded by run_one's error boundary)
+            try:
+                tunable = job.materialize()
+                eng = _resolve_engine_name(tunable, job.engine)
+                key, _ = cache_key(tunable, eng,
+                                   params=dict(job.engine_kwargs) or None)
+                return key
+            except Exception:
+                return f"@unresolvable-job-{i}"
+
         if workers > 1 and len(self.jobs) > 1:
             from concurrent.futures import ThreadPoolExecutor
             slots: list[JobResult | None] = [None] * len(self.jobs)
             pooled = [(i, j) for i, j in enumerate(self.jobs) if not j.timed]
             timed = [(i, j) for i, j in enumerate(self.jobs) if j.timed]
+            # group same-cache-key jobs into ONE pool task executed
+            # serially: the first member tunes, the rest skip-on-hit —
+            # without this, duplicate modeled jobs race the cache and
+            # both tune (last write wins)
+            groups: dict[str, list[tuple[int, TuningJob]]] = {}
+            for i, job in pooled:
+                groups.setdefault(resolve_key(i, job), []).append((i, job))
+
+            def run_group(members: list[tuple[int, TuningJob]]) -> None:
+                for i, job in members:
+                    slots[i] = run_one(i, job)
+
             with ThreadPoolExecutor(max_workers=workers) as pool:
-                futures = {pool.submit(run_one, i, job): i
-                           for i, job in pooled}
-                for f, i in futures.items():
-                    slots[i] = f.result()
+                futures = [pool.submit(run_group, members)
+                           for members in groups.values()]
+                for f in futures:
+                    f.result()
             for i, job in timed:         # quiet machine: pool is drained
                 slots[i] = run_one(i, job)
             report.results.extend(slots)

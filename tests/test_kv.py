@@ -91,6 +91,36 @@ def test_allocator_trim_frees_only_whole_dead_pages():
     assert alloc.page_table[0, 1] == NO_PAGE
 
 
+def test_allocator_rewind_frees_pages_above_keep():
+    alloc = make_alloc(page_size=4)
+    alloc.ensure(0, 14)                        # 4 pages (positions 0..13)
+    kept = alloc.slot_pages(0)[:2]
+    assert alloc.rewind(0, 7) == 2             # keep 2 pages (0..6)
+    assert alloc.slot_pages(0) == kept
+    assert alloc.free_pages == 8 - 2
+    # unlike trim, rewind LOWERS the high-water mark: the freed logical
+    # pages can be re-backed by a later ensure (draft rejected, decode
+    # continues through those positions)
+    assert alloc.ensure(0, 14)
+    assert len(alloc.slot_pages(0)) == 4
+    assert alloc.slot_pages(0)[:2] == kept     # kept prefix untouched
+
+
+def test_allocator_rewind_noop_within_kept_pages():
+    alloc = make_alloc(page_size=4)
+    alloc.ensure(0, 8)                         # 2 pages
+    before = alloc.slot_pages(0)
+    assert alloc.rewind(0, 8) == 0             # boundary: nothing above
+    assert alloc.rewind(0, 5) == 0             # page 1 still partly kept
+    assert alloc.slot_pages(0) == before
+    assert alloc.rewind(0, 4) == 1             # positions 4..7 dropped
+    assert alloc.slot_pages(0) == before[:1]
+    # empty slot: rewind to zero frees everything and is idempotent
+    assert alloc.rewind(0, 0) == 1
+    assert alloc.rewind(0, 0) == 0
+    assert alloc.slot_pages(0) == [] and alloc.free_pages == 8
+
+
 def test_allocator_overflowing_page_table_raises():
     alloc = make_alloc(pages_per_slot=2, page_size=4)
     with pytest.raises(ValueError, match="exceed the page table"):

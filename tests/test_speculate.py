@@ -1,0 +1,366 @@
+"""Speculative-decoding subsystem tests: drafter units, greedy parity
+across architectures (contiguous + paged, staggered admissions), paged
+rollback invariants under partial acceptance, depth caps, telemetry,
+and the ``serve.spec_depth`` tunable's plan/cache integration.
+
+Parity tests run float32 params: the Server mirrors the params' dtype
+into its KV cache, and float32 keeps real logit gaps between the
+chunk-shaped verify/commit reductions and the one-token baseline (at
+bfloat16 a random reduced model produces exact logit ties, which flip
+on schedule-dependent ulp noise — see the serve module docstring)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.runtime.serve import Server, timed_server_drain
+from repro.runtime.speculate import (DraftModelDrafter, Drafter,
+                                     NGramDrafter, SpecDepthTunable,
+                                     make_drafter, spec_depth_tunable)
+
+
+def f32_model(arch="smollm-135m", **extra):
+    cfg = get_config(arch).reduced().replace(logits_dtype="float32", **extra)
+    api = build_model(cfg)
+    params = jax.tree_util.tree_map(lambda a: a.astype(jnp.float32),
+                                    api.init(jax.random.PRNGKey(0)))
+    return api, params
+
+
+def cycled_prompts(vocab, n, length, period=4):
+    return [[(r + i % period) % (vocab - 1) + 1 for i in range(length)]
+            for r in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# drafter units
+# ---------------------------------------------------------------------------
+
+
+def test_ngram_drafter_longest_most_recent_match():
+    d = NGramDrafter()
+    # suffix [7, 8] occurred earlier; propose its continuation
+    assert d.propose([1, 7, 8, 9, 5, 7, 8], 3) == [9, 5, 7]
+    # the MOST RECENT occurrence wins over an older one
+    assert d.propose([7, 8, 1, 7, 8, 2, 7, 8], 1) == [2]
+    # no match, nothing proposed
+    assert d.propose([1, 2, 3, 4], 3) == []
+    assert d.propose([1, 2], 0) == []
+    assert d.propose([5], 4) == []
+
+
+def test_ngram_drafter_caps_at_depth():
+    d = NGramDrafter()
+    out = d.propose([1, 2, 3, 4, 5, 1, 2, 3], 2)
+    assert out == [4, 5]
+
+
+def test_draft_model_drafter_matches_target_greedy():
+    """Self-draft (draft model == target) proposes exactly the target's
+    greedy continuation — the 100%-acceptance reference."""
+
+    api, params = f32_model()
+    d = DraftModelDrafter(api, params, bucket=8)
+    prompt = cycled_prompts(api.cfg.vocab, 1, 6)[0]
+    out = d.propose(prompt, 3)
+    assert len(out) == 3
+    # cross-check token 1 against a direct full forward
+    buf = np.zeros((1, 8), np.int32)
+    buf[0, :6] = prompt
+    logits = api.forward(params, {"tokens": jnp.asarray(buf)})
+    assert out[0] == int(jnp.argmax(logits[0, 5]))
+
+
+def test_make_drafter_resolution_and_errors():
+    assert isinstance(make_drafter("ngram"), NGramDrafter)
+    d = NGramDrafter()
+    assert make_drafter(d) is d
+    assert isinstance(d, Drafter)
+    with pytest.raises(ValueError, match="needs api=/params="):
+        make_drafter("draft")
+    with pytest.raises(ValueError, match="unknown drafter"):
+        make_drafter("telepathy")
+    with pytest.raises(TypeError, match="not a Drafter"):
+        make_drafter(42)  # type: ignore[arg-type]
+
+
+# ---------------------------------------------------------------------------
+# greedy parity: speculation is a schedule change, never a text change
+# ---------------------------------------------------------------------------
+
+
+def _drain_outs(api, params, prompts, *, max_new, staggered=True, **kw):
+    srv = Server(api, params, batch=2, context=32, prefill_chunk=4, **kw)
+    reqs = [srv.submit(prompts[0], max_new=max_new)]
+    if staggered:
+        for _ in range(2):
+            srv.tick()           # first request mid-prefill when rest land
+    for p in prompts[1:]:
+        reqs.append(srv.submit(p, max_new=max_new))
+    srv.run_until_drained()
+    assert all(r.done for r in reqs)
+    return [r.out for r in reqs], srv
+
+
+@pytest.mark.parametrize("arch,extra", [
+    ("smollm-135m", {}),                       # dense GQA
+    ("qwen1.5-4b", {}),                        # dense MHA + qkv bias
+    ("smollm-135m", {"window": 8}),            # sliding-window ring
+    ("hymba-1.5b", {}),                        # hybrid attn + SSM state
+])
+@pytest.mark.parametrize("paged", [False, True])
+def test_speculative_parity_staggered(arch, extra, paged):
+    """n-gram and self-draft speculation reproduce baseline greedy
+    decode token-for-token under staggered admissions, contiguous and
+    paged, across attention families (partial-acceptance commits must
+    keep SSM recurrences and SWA rings exact too)."""
+
+    api, params = f32_model(arch, **extra)
+    prompts = cycled_prompts(api.cfg.vocab, 3, 8)
+    pk = dict(paged=True, page_size=8) if paged else {}
+    base, _ = _drain_outs(api, params, prompts, max_new=6, **pk)
+    for speculate in ("ngram", "draft"):
+        outs, srv = _drain_outs(api, params, prompts, max_new=6,
+                                speculate=speculate, spec_depth=3, **pk)
+        assert outs == base, f"{speculate} diverged from baseline"
+        st = srv.stats()
+        assert st["tokens_generated"] == sum(len(o) for o in base)
+        if speculate == "draft":
+            # self-draft acceptance is exact -> strictly fewer ticks
+            assert st["accept_rate"] == 1.0
+            assert st["ticks"] < 3 * 6
+
+
+def test_snapshot_survives_host_mutation():
+    """``_snapshot`` must hand jax a buffer the engine can never touch
+    again.  The raw ``jnp.asarray`` of a small aligned numpy array
+    zero-copy-aliases it on the CPU backend, so later in-place host
+    writes leak into whatever async dispatch holds the alias."""
+    from repro.runtime.serve import _snapshot
+
+    a = np.arange(4, dtype=np.int32)
+    snap = _snapshot(a)
+    a[:] = -7
+    assert np.asarray(snap).tolist() == [0, 1, 2, 3]
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_dispatch_args_immune_to_host_buffer_mutation(paged):
+    """Engine dispatches must see device SNAPSHOTS of the persistent
+    host arrays (``slot_pos``, ``page_table``).  ``jnp.asarray``
+    zero-copy-aliases small aligned numpy arrays on the CPU backend,
+    and dispatches are asynchronous — before the ``_snapshot`` fix an
+    in-flight speculation commit (whose logits nothing syncs on) could
+    observe the ``slot_pos[s] += e`` made three lines below its
+    dispatch and scatter the committed tokens one chunk too far,
+    leaving the true rows holding the slot's PREVIOUS occupant's KV.
+    The window only opens under CPU load, so simulate the host winning
+    the race deterministically: corrupt the live host buffers while
+    every jitted step executes, restore them after — parity with the
+    baseline drain must survive."""
+    api, params = f32_model()
+    prompts = cycled_prompts(api.cfg.vocab, 4, 8)
+    pk = dict(paged=True, page_size=8) if paged else {}
+    base, _ = _drain_outs(api, params, prompts, max_new=6, staggered=False,
+                          **pk)
+
+    srv = Server(api, params, batch=2, context=32, prefill_chunk=4,
+                 speculate="ngram", spec_depth=3, **pk)
+
+    def racy(step):
+        def run(*a):
+            out = step(*a)
+            # host gets ahead of the in-flight dispatch: corrupt the
+            # live buffers, force the execution to finish inside the
+            # corrupted window, then restore for the engine's own
+            # bookkeeping
+            srv.slot_pos += 1
+            if paged:
+                srv.alloc.page_table += 1
+            try:
+                jax.block_until_ready(out)
+            finally:
+                srv.slot_pos -= 1
+                if paged:
+                    srv.alloc.page_table -= 1
+            return out
+        return run
+
+    srv._step = racy(srv._step)
+    srv._verify_step = racy(srv._verify_step)
+    srv._prefill_step = racy(srv._prefill_step)
+    reqs = [srv.submit(p, max_new=6) for p in prompts]
+    srv.run_until_drained()
+    assert all(r.done for r in reqs)
+    assert [r.out for r in reqs] == base
+
+
+def test_self_draft_hits_depth_plus_one_tokens_per_tick():
+    api, params = f32_model()
+    prompts = cycled_prompts(api.cfg.vocab, 2, 8)
+    base, bsrv = _drain_outs(api, params, prompts, max_new=8,
+                             staggered=False)
+    outs, srv = _drain_outs(api, params, prompts, max_new=8,
+                            staggered=False, speculate="draft",
+                            spec_depth=4)
+    assert outs == base
+    st, bst = srv.stats(), bsrv.stats()
+    assert st["ticks"] < bst["ticks"]
+    assert st["ticks_per_token"] < bst["ticks_per_token"]
+
+
+# ---------------------------------------------------------------------------
+# rollback invariants: rejected drafts leave no trace
+# ---------------------------------------------------------------------------
+
+
+class CorruptTailDrafter:
+    """Self-draft with the tail corrupted from index ``split`` on:
+    accepts exactly ``split`` tokens per verify, forcing the rejection/
+    rollback path every single spec tick."""
+
+    name = "corrupt-tail"
+
+    def __init__(self, api, params, split=1):
+        self.inner = DraftModelDrafter(api, params, bucket=8)
+        self.split = split
+
+    def propose(self, tokens, depth):
+        out = self.inner.propose(tokens, depth)
+        vocab = self.inner.api.cfg.vocab
+        return [t if i < self.split else (t + 1) % vocab
+                for i, t in enumerate(out)]
+
+
+def test_partial_acceptance_parity_and_counters():
+    api, params = f32_model()
+    prompts = cycled_prompts(api.cfg.vocab, 2, 8)
+    base, _ = _drain_outs(api, params, prompts, max_new=6, staggered=False)
+    drafter = CorruptTailDrafter(api, params, split=1)
+    outs, srv = _drain_outs(api, params, prompts, max_new=6,
+                            staggered=False, speculate=drafter,
+                            spec_depth=3)
+    assert outs == base
+    st = srv.stats()
+    assert st["spec_proposed"] > 0
+    assert 0 < st["spec_accepted"] < st["spec_proposed"]
+
+
+def test_paged_rollback_page_table_matches_never_speculated_drain():
+    """Pages grabbed for rejected draft positions are handed back the
+    same tick: after the drain the allocator's free count and page
+    tables are byte-identical to a drain that never speculated."""
+
+    api, params = f32_model()
+    prompts = cycled_prompts(api.cfg.vocab, 2, 8)
+    pk = dict(paged=True, page_size=4)
+    base, bsrv = _drain_outs(api, params, prompts, max_new=6,
+                             staggered=False, **pk)
+    drafter = CorruptTailDrafter(api, params, split=1)
+    outs, srv = _drain_outs(api, params, prompts, max_new=6,
+                            staggered=False, speculate=drafter,
+                            spec_depth=3, **pk)
+    assert outs == base
+    assert srv.alloc.free_pages == bsrv.alloc.free_pages
+    assert np.array_equal(srv.alloc.page_table, bsrv.alloc.page_table)
+    assert srv.alloc.used_pages == 0        # everything retired + released
+
+
+def test_spec_never_overshoots_max_new_or_context():
+    """Depth caps: a deep draft near a request's max_new (or the context
+    edge) is clipped so the request stops at exactly the baseline
+    stopping point."""
+
+    api, params = f32_model()
+    prompts = cycled_prompts(api.cfg.vocab, 2, 8)
+    base, _ = _drain_outs(api, params, prompts, max_new=3, staggered=False)
+    outs, srv = _drain_outs(api, params, prompts, max_new=3,
+                            staggered=False, speculate="draft",
+                            spec_depth=8)
+    assert outs == base
+    assert all(len(o) == 3 for o in outs)
+
+
+# ---------------------------------------------------------------------------
+# serve.spec_depth tunable
+# ---------------------------------------------------------------------------
+
+
+def test_spec_depth_tunable_space_and_cost_shape():
+    tb = SpecDepthTunable(param_bytes=1 << 22, layers=2, d_model=64,
+                          kv_width=32, context=64, prompt_len=8,
+                          requests=8, mean_new=16, batch=4, max_depth=8)
+    cfgs = list(tb.space())
+    assert sorted({c["depth"] for c in cfgs}) == [1, 2, 4, 8]
+    assert {c["drafter"] for c in cfgs} == {"ngram", "draft"}
+    # the geometric acceptance series: deeper drafts yield more tokens
+    # per tick, saturating with the acceptance rate
+    t1 = tb.tokens_per_tick({"depth": 1, "drafter": "draft"})
+    t8 = tb.tokens_per_tick({"depth": 8, "drafter": "draft"})
+    assert 1.0 < t1 < t8 < 1.0 + 0.8 / 0.2 + 1e-9
+    # modeled drain cost is finite and positive everywhere
+    assert all(tb.cost(c) > 0 for c in cfgs)
+    fp = tb.fingerprint()
+    assert fp["tunable"] == "serve.spec_depth" and fp["unit"] == "us"
+    assert fp["drafters"] == ["ngram", "draft"]
+    assert "api" not in fp and "params" not in fp
+
+
+def test_spec_depth_tunable_rejects_unknown_drafter():
+    with pytest.raises(ValueError, match="drafters must be drawn"):
+        SpecDepthTunable(param_bytes=1 << 20, layers=2, d_model=64,
+                         kv_width=32, context=32, prompt_len=4,
+                         requests=2, mean_new=2, drafters=("oracle",))
+
+
+def test_spec_depth_measure_fills_last_stats():
+    api, params = f32_model()
+    tb = spec_depth_tunable(api, context=32, prompt_len=6, requests=2,
+                            max_new=3, batch=2, params=params)
+    t = tb.measure({"depth": 2, "drafter": "draft"})
+    assert t > 0
+    st = tb.last_stats
+    assert st["spec_proposed"] > 0 and st["accept_rate"] == 1.0
+
+
+def test_spec_depth_plan_roundtrip_zero_engine_runs(tmp_path):
+    """``serve.spec_depth`` resolves from a warmed cache through a
+    pure-JSON plan spec with ZERO engine runs."""
+
+    from repro.tune import TuningCache, TuningPlan, tune
+
+    api, params = f32_model()
+    cfg = api.cfg
+    cache = TuningCache(tmp_path / "c.json")
+    tb = spec_depth_tunable(api, context=32, prompt_len=6, requests=2,
+                            max_new=3, batch=2, params=params)
+    res = tune(tb, engine="grid", cache=cache)
+
+    spec = {"name": "spec-warmup", "jobs": [
+        {"tunable": "serve.spec_depth",
+         "params": {"param_bytes": api.param_count() * 2,
+                    "layers": cfg.n_layers, "d_model": cfg.d_model,
+                    "kv_width": cfg.n_kv_heads * cfg.hd, "context": 32,
+                    "prompt_len": 6, "requests": 2, "mean_new": 3,
+                    "batch": 2},
+         "engine": "grid"}]}
+    report = TuningPlan.from_spec(spec).run(cache=cache)
+    assert report.ok and report.results[0].status == "hit"
+    assert report.results[0].best_config == dict(res.best_config)
+
+
+def test_timed_server_drain_stats_out():
+    api, params = f32_model()
+    prompts = cycled_prompts(api.cfg.vocab, 2, 6)
+    stats: dict = {}
+    t = timed_server_drain(api, params, batch=2, context=32,
+                           prompts=prompts, max_new=3, speculate="ngram",
+                           spec_depth=2, warmup=0, iters=1,
+                           stats_out=stats)
+    assert t > 0
+    assert stats["ticks"] > 0
+    assert stats["tokens_generated"] == 2 * 3
+    assert "accept_rate" in stats and "spec_ticks" in stats

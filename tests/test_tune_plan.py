@@ -128,6 +128,33 @@ def test_plan_parallel_run_matches_serial(tmp_path):
     assert rerun.counts["hits"] == 4
 
 
+def test_plan_parallel_duplicate_keys_tune_once(tmp_path):
+    """Regression: two jobs resolving to the SAME cache key used to race
+    under ``workers=N`` — both missed, both tuned, last write won.
+    Grouped dispatch runs same-key jobs serially inside one pool task:
+    the first tunes, every duplicate is a cache hit."""
+
+    class SlowCounting(CountingTunable):
+        def cost(self, cfg):
+            time.sleep(0.02)           # widen the old race window
+            return super().cost(cfg)
+
+    tunables = [SlowCounting("dup") for _ in range(4)]
+    plan = TuningPlan(name="dups")
+    for t in tunables:
+        plan.add(t, engine="grid")
+    plan.add(CountingTunable("solo"), engine="grid")
+    report = plan.run(cache=TuningCache(tmp_path / "c.json"), workers=4)
+    assert report.ok
+    assert report.counts == {"jobs": 5, "hits": 3, "tuned": 2,
+                             "forced": 0, "failed": 0}
+    # exactly one of the duplicates did engine work
+    assert sum(1 for t in tunables if t.cost_calls) == 1
+    # and every duplicate reports the one tuned pick
+    picks = {r.best_config["block"] for r in report.results[:4]}
+    assert picks == {4}
+
+
 def test_plan_from_spec_grid_expansion_and_labels(tmp_path):
     spec = {"name": "s", "jobs": [
         {"tunable": "kernels.tuned_reduction", "grid": {"n": [4096, 8192]},
