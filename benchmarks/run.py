@@ -13,6 +13,8 @@ artifact.
 ``--prefill`` runs only the chunked-vs-tokenwise serving prefill drain.
 ``--paged`` runs only the paged-vs-contiguous KV cache drain.
 ``--spec`` runs only the speculative-vs-one-token decode drain.
+``--traffic`` runs only the trace-driven scheduling/prefix-sharing
+benchmark (and writes ``BENCH_traffic.json``).
 """
 
 from __future__ import annotations
@@ -67,15 +69,19 @@ def main(argv=None) -> None:
                     help="paged-vs-contiguous KV cache drain only")
     ap.add_argument("--spec", action="store_true",
                     help="speculative-vs-one-token decode drain only")
+    ap.add_argument("--traffic", action="store_true",
+                    help="trace-driven scheduling + prefix-sharing "
+                         "benchmark only")
     ap.add_argument("--json-out", default=None,
                     help="write the CSV as machine-readable JSON here "
-                         "(default BENCH_smoke.json with --smoke)")
+                         "(default BENCH_smoke.json with --smoke, "
+                         "BENCH_traffic.json with --traffic)")
     args = ap.parse_args(argv)
 
     from benchmarks import (bench_measure, bench_paged, bench_prefill,
                             bench_roofline, bench_spec, bench_sweep,
                             bench_table1, bench_table2, bench_table3,
-                            bench_tpu_tuning)
+                            bench_tpu_tuning, bench_traffic)
 
     csv: list[str] = []
     t0 = time.perf_counter()
@@ -87,6 +93,8 @@ def main(argv=None) -> None:
         bench_paged.run(csv, **bench_paged.SMOKE)
     elif args.spec:
         bench_spec.run(csv, **bench_spec.SMOKE)
+    elif args.traffic:
+        bench_traffic.run(csv, **bench_traffic.SMOKE)
     elif args.smoke:
         bench_table3.run(csv)
         bench_tpu_tuning.run(csv, cells=[("minitron-8b", "train_4k", 1)])
@@ -108,6 +116,7 @@ def main(argv=None) -> None:
         bench_prefill.run(csv, **bench_prefill.FULL)
         bench_paged.run(csv, **bench_paged.FULL)
         bench_spec.run(csv, **bench_spec.FULL)
+        bench_traffic.run(csv, **bench_traffic.FULL)
         bench_roofline.run(csv)
     dt = time.perf_counter() - t0
 
@@ -116,7 +125,9 @@ def main(argv=None) -> None:
         print(line)
     print(f"\ntotal benchmark wall time: {dt:.1f}s")
 
-    json_out = args.json_out or ("BENCH_smoke.json" if args.smoke else None)
+    json_out = args.json_out or ("BENCH_smoke.json" if args.smoke
+                                 else "BENCH_traffic.json" if args.traffic
+                                 else None)
     if json_out:
         with open(json_out, "w") as f:
             json.dump(_csv_to_json(csv, dt), f, indent=2)

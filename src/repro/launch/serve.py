@@ -15,9 +15,11 @@ import numpy as np
 
 from ..configs import get_config
 from ..models import build_model
-from ..runtime.serve import (Server, decode_batch_tunable, kv_page_tunable,
-                             prefill_chunk_tunable)
+from ..runtime.scheduler import SCHEDULER_KINDS
+from ..runtime.serve import Server
 from ..runtime.speculate import DRAFTER_KINDS, spec_depth_tunable
+from ..runtime.tunables import (decode_batch_tunable, kv_page_tunable,
+                                prefill_chunk_tunable, scheduler_tunable)
 
 
 def main(argv=None) -> None:
@@ -39,6 +41,14 @@ def main(argv=None) -> None:
     ap.add_argument("--kv-pages", type=int, default=None,
                     help="pool size in pages (default: full per-slot "
                          "backing, batch * ceil(context/page))")
+    ap.add_argument("--scheduler", choices=list(SCHEDULER_KINDS),
+                    default=None,
+                    help="serving policy: fcfs (default), priority "
+                         "(SLO classes, preemptive), or prefix "
+                         "(prefix-affinity admission)")
+    ap.add_argument("--share-prefix", action="store_true",
+                    help="copy-on-write KV prefix sharing across slots "
+                         "(implies --paged)")
     ap.add_argument("--speculate", choices=list(DRAFTER_KINDS), default=None,
                     help="speculative decoding drafter: 'ngram' "
                          "(prompt-lookup, free) or 'draft' (self-draft "
@@ -56,6 +66,10 @@ def main(argv=None) -> None:
     ap.add_argument("--tune-spec", action="store_true",
                     help="pick the speculation policy (depth x drafter) "
                          "via repro.tune (implies speculation)")
+    ap.add_argument("--tune-scheduler", action="store_true",
+                    help="pick the scheduling policy (policy x age_limit) "
+                         "via repro.tune over a seeded traffic trace "
+                         "(implies --paged; measured drains)")
     ap.add_argument("--tune-engine", default="grid",
                     help="tuning engine for --tune-batch/--tune-prefill/"
                          "--tune-page/--tune-spec; 'measure' refines the "
@@ -87,7 +101,8 @@ def main(argv=None) -> None:
     batch = args.batch
     prefill_chunk = args.prefill_chunk
     page_size = args.page_size
-    paged = args.paged or args.tune_page
+    paged = (args.paged or args.tune_page or args.share_prefix
+             or args.tune_scheduler)
     if args.tune_batch:
         tb = decode_batch_tunable(api, context=args.context,
                                   requests=args.requests,
@@ -119,11 +134,28 @@ def main(argv=None) -> None:
         picked = run_job(ts, "spec", None)
         spec_depth = int(picked["depth"])
         speculate = str(picked["drafter"])
+    scheduler = args.scheduler
+    share_prefix = args.share_prefix
+    if args.tune_scheduler:
+        # policy differences are what the modeled cost can only rank,
+        # not settle — this tunable measures real trace drains
+        tsc = scheduler_tunable(api, context=args.context, batch=batch,
+                                requests=args.requests,
+                                page_size=page_size,
+                                prefill_chunk=prefill_chunk,
+                                prompt_len=(max(2, args.prompt_len // 2),
+                                            args.prompt_len),
+                                max_new=(max(1, args.max_new // 2),
+                                         args.max_new), params=params)
+        picked = run_job(tsc, "scheduler", None)
+        scheduler = str(picked["policy"])
+        share_prefix = share_prefix or scheduler == "prefix"
 
     server = Server(api, params, batch=batch, context=args.context,
                     prefill_chunk=prefill_chunk, paged=paged,
                     page_size=page_size, kv_pages=args.kv_pages,
-                    speculate=speculate, spec_depth=spec_depth)
+                    speculate=speculate, spec_depth=spec_depth,
+                    scheduler=scheduler, share_prefix=share_prefix)
     rng = np.random.default_rng(args.seed)
     for _ in range(args.requests):
         prompt = rng.integers(0, cfg.vocab, args.prompt_len).tolist()
@@ -149,6 +181,13 @@ def main(argv=None) -> None:
               f"peak_used={st['peak_used_pages']:.0f} "
               f"peak_active={st['peak_active']:.0f} "
               f"deferrals={st['deferrals']:.0f}")
+    if scheduler is not None or share_prefix:
+        st = server.stats()
+        print(f"  scheduler: policy={scheduler or 'fcfs'} "
+              f"preemptions={st['preemptions']:.0f} "
+              f"share_hits={st['share_hits']:.0f} "
+              f"shared_tokens={st['shared_tokens']:.0f} "
+              f"cow_copies={st['cow_copies']:.0f}")
     if speculate is not None:
         st = server.stats()
         print(f"  speculation: drafter={speculate} depth={spec_depth} "

@@ -2,23 +2,38 @@
 
 from .kv import PagedKVAllocator, PagedKVSpec
 from .loop import History, LoopConfig, SimulatedFailure, run_training
-from .serve import (DecodeBatchTunable, KVPageTunable, PrefillChunkTunable,
-                    Request, Server, choose_batch, choose_kv_page,
-                    choose_prefill_chunk, decode_batch_tunable,
-                    kv_page_tunable, prefill_chunk_tunable,
-                    timed_server_drain)
+from .scheduler import (SCHEDULER_KINDS, FCFSScheduler,
+                        PrefixAffinityScheduler, PriorityScheduler,
+                        Scheduler, make_scheduler, register_scheduler)
+from .serve import Request, Server
 from .speculate import (Drafter, DraftModelDrafter, NGramDrafter,
                         SpecDepthTunable, choose_spec_depth, make_drafter,
                         spec_depth_tunable)
 from .train import (TrainConfig, TrainState, abstract_train_state,
                     build_train_step, init_train_state)
+from .tunables import (DecodeBatchTunable, KVPageTunable, PrefillChunkTunable,
+                       SchedulerTunable, choose_batch, choose_kv_page,
+                       choose_prefill_chunk, choose_scheduler,
+                       decode_batch_tunable, kv_page_tunable,
+                       prefill_chunk_tunable, scheduler_tunable,
+                       timed_server_drain, timed_trace_drain)
+from .workload import (SLO_CLASSES, TraceConfig, TraceRequest, drive_trace,
+                       generate_trace, summarize)
 
 __all__ = ["History", "LoopConfig", "SimulatedFailure", "run_training",
            "Request", "Server", "PagedKVAllocator", "PagedKVSpec",
+           "Scheduler", "FCFSScheduler", "PriorityScheduler",
+           "PrefixAffinityScheduler", "register_scheduler", "make_scheduler",
+           "SCHEDULER_KINDS",
            "DecodeBatchTunable", "PrefillChunkTunable", "KVPageTunable",
+           "SchedulerTunable",
            "choose_batch", "choose_prefill_chunk", "choose_kv_page",
+           "choose_scheduler",
            "decode_batch_tunable", "prefill_chunk_tunable",
-           "kv_page_tunable", "timed_server_drain",
+           "kv_page_tunable", "scheduler_tunable",
+           "timed_server_drain", "timed_trace_drain",
+           "SLO_CLASSES", "TraceRequest", "TraceConfig", "generate_trace",
+           "drive_trace", "summarize",
            "Drafter", "NGramDrafter", "DraftModelDrafter", "make_drafter",
            "SpecDepthTunable", "spec_depth_tunable", "choose_spec_depth",
            "TrainConfig", "TrainState", "abstract_train_state",

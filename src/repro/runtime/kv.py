@@ -16,13 +16,29 @@ array); the device-side gather/scatter lives in
 sibling, and :class:`repro.runtime.serve.Server` threads the two
 together (``paged=True``).
 
+**Copy-on-write prefix sharing** extends the table with per-page
+refcounts: :meth:`PagedKVAllocator.share` maps the pages backing a
+common prompt prefix into a second slot's page table (the K/V is
+prefilled once, then referenced N times), and
+:meth:`PagedKVAllocator.cow_pages` breaks the sharing page-by-page the
+moment a slot is about to *write* into a shared page — the caller gets
+``(src_page, dst_page)`` pairs to copy device-side, and the writer
+proceeds against its private copy.  ``release``/``rewind``/``trim``
+decrement refcounts and only return a page to the free list when its
+last holder lets go.
+
 Invariants the allocator maintains (tested in ``tests/test_kv.py``):
 
-* a physical page is owned by at most one live slot,
+* a physical page is EXCLUSIVELY owned unless explicitly shared via
+  ``share`` (refcount == number of page tables mapping it),
 * ``ensure`` is all-or-nothing — a partial allocation never leaks,
-* ``release``/``trim`` return pages to the free list (LIFO, so reuse is
-  immediate and cache-friendly),
-* the page table never points at a freed page.
+* ``release``/``rewind``/``trim`` decrement refcounts; a page returns
+  to the free list (LIFO, so reuse is immediate and cache-friendly)
+  exactly when its refcount reaches zero,
+* the page table never points at a freed page,
+* ``cow_pages`` is all-or-nothing: a write range either gets every
+  shared page it touches copied, or (free list too short) nothing
+  changes.
 """
 
 from __future__ import annotations
@@ -84,6 +100,9 @@ class PagedKVAllocator:
         self.page_table = np.full((n_slots, spec.pages_per_slot), NO_PAGE,
                                   np.int32)
         self.owner = np.full(spec.n_pages, NO_PAGE, np.int32)
+        # live page-table references per page: 1 = exclusive, >1 =
+        # prefix-shared (writes must go through cow_pages first)
+        self.refcount = np.zeros(spec.n_pages, np.int32)
         # LIFO free list: a just-released page is handed out first
         self._free: list[int] = list(range(spec.n_pages - 1, -1, -1))
         # highest logical page ever backed per slot: ensure() only
@@ -118,7 +137,36 @@ class PagedKVAllocator:
         row = self.page_table[slot]
         return [int(p) for p in row if p != NO_PAGE]
 
+    @property
+    def shared_pages(self) -> int:
+        """Physical pages currently mapped by more than one slot."""
+
+        return int(np.sum(self.refcount > 1))
+
+    def is_shared(self, slot: int, logical_page: int) -> bool:
+        page = int(self.page_table[slot, logical_page])
+        return page != NO_PAGE and int(self.refcount[page]) > 1
+
     # -- mutation -----------------------------------------------------------
+
+    def _deref(self, page: int) -> bool:
+        """Drop one reference to ``page`` (its table entry must already
+        be cleared); frees it when the last holder lets go.  Returns
+        True when the page actually hit the free list."""
+
+        self.refcount[page] -= 1
+        if self.refcount[page] <= 0:
+            self.refcount[page] = 0
+            self.owner[page] = NO_PAGE
+            self._free.append(page)
+            return True
+        if not np.any(self.page_table[int(self.owner[page])] == page):
+            # the nominal owner let go first: hand ownership to any
+            # remaining holder so owner never names a slot without the
+            # page in its table
+            holders = np.argwhere(self.page_table == page)
+            self.owner[page] = int(holders[0][0]) if len(holders) else NO_PAGE
+        return False
 
     def ensure(self, slot: int, n_tokens: int) -> bool:
         """Back positions ``[0, n_tokens)`` of ``slot``; allocates only
@@ -143,19 +191,74 @@ class PagedKVAllocator:
             page = self._free.pop()
             self.page_table[slot, lp] = page
             self.owner[page] = slot
+            self.refcount[page] = 1
         self._top[slot] = top_needed
         return True
 
+    def share(self, src_slot: int, dst_slot: int, n_tokens: int) -> int:
+        """Map the pages backing positions ``[0, n_tokens)`` of
+        ``src_slot`` into ``dst_slot``'s page table (refcounts bumped,
+        no K/V moved — both slots now read the same physical pages).
+        ``dst_slot`` must be empty and the source range fully backed.
+        Returns the number of pages shared."""
+
+        if n_tokens <= 0:
+            return 0
+        if int(self._top[dst_slot]) != -1 or self.slot_pages(dst_slot):
+            raise ValueError(f"share: dst slot {dst_slot} is not empty")
+        need = self.pages_needed(n_tokens)
+        row = self.page_table[src_slot, :need]
+        if np.any(row == NO_PAGE):
+            raise ValueError(
+                f"share: src slot {src_slot} does not back {n_tokens} "
+                f"tokens ({need} pages)")
+        for lp in range(need):
+            page = int(row[lp])
+            self.page_table[dst_slot, lp] = page
+            self.refcount[page] += 1
+        self._top[dst_slot] = need - 1
+        return need
+
+    def cow_pages(self, slot: int, start_pos: int,
+                  end_pos: int) -> list[tuple[int, int]] | None:
+        """Break sharing before ``slot`` writes positions
+        ``[start_pos, end_pos)``: every SHARED page in that range is
+        remapped to a fresh private page (refcount 1, old refcount
+        dropped).  Returns ``(old_page, new_page)`` pairs for the caller
+        to copy device-side, or None when the free list cannot cover
+        them (all-or-nothing — no table entry changes on failure)."""
+
+        if end_pos <= start_pos:
+            return []
+        ps = self.spec.page_size
+        lo = start_pos // ps
+        hi = min((end_pos - 1) // ps, self.spec.pages_per_slot - 1)
+        todo = [lp for lp in range(lo, hi + 1)
+                if self.is_shared(slot, lp)]
+        if len(todo) > len(self._free):
+            return None
+        pairs: list[tuple[int, int]] = []
+        for lp in todo:
+            old = int(self.page_table[slot, lp])
+            new = self._free.pop()
+            self.page_table[slot, lp] = new
+            self.owner[new] = slot
+            self.refcount[new] = 1
+            self._deref(old)
+            pairs.append((old, new))
+        return pairs
+
     def release(self, slot: int) -> int:
-        """Free every page of ``slot`` (retire / deferral); returns the
-        number released."""
+        """Drop ``slot``'s reference to every page it maps (retire /
+        deferral / preemption); a page returns to the free list only
+        when no other slot still maps it.  Returns the number of pages
+        the slot let go of."""
 
         pages = self.slot_pages(slot)
-        for page in pages:
-            self.owner[page] = NO_PAGE
-            self._free.append(page)
         self.page_table[slot] = NO_PAGE
         self._top[slot] = -1
+        for page in pages:
+            self._deref(page)
         return len(pages)
 
     def rewind(self, slot: int, n_tokens: int) -> int:
@@ -173,10 +276,9 @@ class PagedKVAllocator:
         for lp in range(keep, int(self._top[slot]) + 1):
             page = int(self.page_table[slot, lp])
             if page != NO_PAGE:
-                self.owner[page] = NO_PAGE
-                self._free.append(page)
                 self.page_table[slot, lp] = NO_PAGE
-                freed += 1
+                if self._deref(page):
+                    freed += 1
         self._top[slot] = min(int(self._top[slot]), keep - 1)
         return freed
 
@@ -192,10 +294,9 @@ class PagedKVAllocator:
         for lp in range(min(full_below, self.spec.pages_per_slot)):
             page = int(self.page_table[slot, lp])
             if page != NO_PAGE:
-                self.owner[page] = NO_PAGE
-                self._free.append(page)
                 self.page_table[slot, lp] = NO_PAGE
-                freed += 1
+                if self._deref(page):
+                    freed += 1
         return freed
 
     # -- stats --------------------------------------------------------------
@@ -216,6 +317,7 @@ class PagedKVAllocator:
             "occupancy": used / self.spec.n_pages,
             "live_tokens": float(live_tokens),
             "fragmentation": (1.0 - live_tokens / cap) if cap else 0.0,
+            "shared_pages": float(self.shared_pages),
         }
 
 

@@ -3,7 +3,7 @@ chunked prefill.
 
 ``Server`` keeps ``batch`` decode slots alive; requests are admitted
 into free slots, finished requests retire and free their slot.  Each
-slot has a *phase*: **prefill** (prompt tokens still unconsumed) or
+slot has a *phase*: **prefill** (stream tokens still unconsumed) or
 **decode** (generating).  An engine tick advances prefilling slots by
 one ``prefill_chunk``-token jitted ``prefill_step`` and decoding slots
 by the one-token jitted ``decode_step`` — a long prompt costs
@@ -13,6 +13,14 @@ TPU-friendly form: static shapes (slot count, chunk size and cache
 length fixed), per-slot state packed in the same pytree the dry-run's
 serve_step lowers.
 
+**This module is mechanism only.**  Every discretionary decision —
+which queued request to admit, which slot to sacrifice when the page
+pool runs dry, when to preempt a low-SLO slot for a waiting high-SLO
+arrival — is delegated to a :class:`~repro.runtime.scheduler.Scheduler`
+(``Server(scheduler="fcfs" | "priority" | "prefix" | instance)``).  The
+serving tunables and their measurement harnesses live in
+:mod:`repro.runtime.tunables` (re-exported here for compatibility).
+
 Greedy sampling; per-slot absolute positions drive RoPE/ring caches, so
 mixed-progress (and mixed-phase) slots coexist in one batch.  Both
 steps gate their state writes per slot, so a prefill tick cannot
@@ -20,13 +28,32 @@ corrupt a decoding neighbour and vice versa.
 
 ``paged=True`` swaps the per-slot KV rings for a shared page pool
 (:mod:`repro.runtime.kv`): admission no longer pre-reserves a full
-``context`` per slot — a request is admitted when its prompt fits the
-*currently free pages*, pages are allocated on demand as prefill chunks
-and decode steps advance, and a tick that runs out of pages defers the
-youngest slot (its pages are released and the request requeued for a
-fresh start).  Mixed short/long traffic then shares one memory budget
-instead of stranding ring capacity.  The page size is a tunable
-(:class:`KVPageTunable`, ``serve.kv_page`` in the plan registry).
+``context`` per slot — a request is admitted when its pages fit the
+currently free pool, pages are allocated on demand as prefill chunks
+and decode steps advance, and a tick that runs out of pages
+**preempts** a policy-chosen victim: its pages are released
+(refcounts decremented — shared pages survive for their sharers) and
+the request is requeued with prompt AND generated tokens intact, to be
+re-prefilled through the chunked path on resume.  Chunked prefill is
+tokenwise-exact, so a preempted request's final output is byte-identical
+to an undisturbed run.  The page size is a tunable
+(:class:`~repro.runtime.tunables.KVPageTunable`, ``serve.kv_page``).
+
+``share_prefix=True`` (paged only) adds **copy-on-write prefix
+sharing**: at placement the server looks for a live slot whose written
+stream shares a page-aligned-or-longer prefix with the new request and
+maps those pages into the new slot's table
+(:meth:`~repro.runtime.kv.PagedKVAllocator.share`) — N requests with
+one system prompt prefill it once.  The first write into a still-shared
+page triggers a device-side page copy
+(:meth:`~repro.runtime.kv.PagedKVAllocator.cow_pages`); only the
+partial last shared page can ever need this, so sharing costs at most
+one page copy per sharer.  Sharing is exact because attention masks
+every key position ≥ the query's own validity: a sharer never attends
+positions it has not itself written (or inherited below the shared
+length), so a mid-prefill source writing beyond the shared length
+cannot leak into a sharer's output.  SSM/hybrid and enc-dec state is
+per-slot recurrence with no position index — sharing is refused there.
 
 ``speculate=`` adds a third per-tick slot population: decoding slots
 with a draft from a :class:`~repro.runtime.speculate.Drafter` verify
@@ -56,18 +83,16 @@ drafter is the ``serve.spec_depth`` tunable
 
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
-from typing import Any, Callable, ClassVar, Mapping
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.search_space import Param, SearchSpace
-from ..core.tpu_machine import HBM_BW, PEAK_FLOPS
 from ..models.api import ModelAPI
-from .kv import PagedKVAllocator, PagedKVSpec
+from .kv import NO_PAGE, PagedKVAllocator, PagedKVSpec
+from .scheduler import Scheduler, make_scheduler
 
 
 def _snapshot(a: np.ndarray) -> jax.Array:
@@ -97,6 +122,11 @@ class Request:
     max_new: int
     out: list[int] = field(default_factory=list)
     done: bool = False
+    slo: str = "interactive"    # SLO class (scheduler.PriorityScheduler)
+    deadline: float | None = None   # absolute driver-clock deadline
+    skips: int = 0              # admissions that bypassed this request
+    preempted: int = 0          # times evicted mid-flight (progress kept)
+    shared_prefix: int = 0      # tokens admitted via COW page sharing
     spec_proposed: int = 0      # draft tokens verified for this request
     spec_accepted: int = 0      # of those, accepted into the output
 
@@ -105,13 +135,26 @@ class Server:
     def __init__(self, api: ModelAPI, params, *, batch: int, context: int,
                  prefill_chunk: int = 32, paged: bool = False,
                  page_size: int = 16, kv_pages: int | None = None,
-                 speculate: Any = None, spec_depth: int = 4):
+                 speculate: Any = None, spec_depth: int = 4,
+                 scheduler: str | Scheduler | None = None,
+                 share_prefix: bool = False):
         self.api = api
         self.params = params
         self.batch = batch
         self.context = context
         self.prefill_chunk = max(1, min(prefill_chunk, context))
         self.paged = paged
+        self.scheduler = make_scheduler(scheduler)
+        self.share_prefix = bool(share_prefix)
+        if self.share_prefix and not paged:
+            raise ValueError(
+                "share_prefix=True needs paged=True: prefix sharing maps "
+                "KV pages between slot page tables, contiguous rings have "
+                "none")
+        if self.share_prefix and api.cfg.is_encdec:
+            raise ValueError(
+                "share_prefix=True is unsupported for encoder-decoder "
+                "models: per-slot cross-K/V is not positionally sharable")
         self.drafter = None
         self.spec_depth = max(1, min(spec_depth, context - 1))
         if speculate is not None:
@@ -132,21 +175,33 @@ class Server:
                     and jnp.issubdtype(leaf.dtype, jnp.floating)), None)
         self.state = api.init_decode_state(
             batch, context, self.alloc.spec if paged else None, dtype=pdt)
+        if self.share_prefix and any(
+                "ssm" in entry or "enc_kv" in entry
+                for entry in self.state["blocks"].values()):
+            raise ValueError(
+                "share_prefix=True needs pure-attention decode state: "
+                "SSM/recurrent state at the share point is per-slot and "
+                "has no position index to share through")
         self.slot_req: list[Request | None] = [None] * batch
         self.slot_pos = np.zeros(batch, np.int32)   # per-slot token count
         self._slot_dirty = np.zeros(batch, bool)    # retired -> stale state
         self._slot_seq = np.zeros(batch, np.int64)  # admission order
         self._seq = 0
-        self.deferrals = 0          # paged: restarts forced by page OOM
+        self.deferrals = 0          # paged: evictions forced by page OOM
+        self.preemptions = 0        # policy-initiated evictions (SLO)
         self.peak_active = 0
         self.peak_used_pages = 0
         # per-drain counters behind stats()
         self.ticks = 0
+        self.slot_ticks = 0         # sum of active slots over ticks
         self.tokens_generated = 0
         self.prefill_chunks = 0
         self.spec_ticks = 0
         self.spec_proposed = 0
         self.spec_accepted = 0
+        self.share_hits = 0         # placements that mapped a prefix
+        self.shared_tokens = 0      # prompt tokens admitted without prefill
+        self.cow_copies = 0         # pages copied by write-triggered COW
         self.queue: list[Request] = []
         self.completed: list[Request] = []
 
@@ -241,10 +296,14 @@ class Server:
 
     # -- API ----------------------------------------------------------------
     def submit(self, prompt: list[int], max_new: int,
-               frames: Any = None) -> Request:
+               frames: Any = None, *, slo: str = "interactive",
+               deadline: float | None = None) -> Request:
         """``frames``: enc-dec audio frontend output (enc_seq, d_model)
         for this request; the encoder runs at admission and its cross-K/V
-        fills the request's slot (serving-side prefill)."""
+        fills the request's slot (serving-side prefill).  ``slo`` names
+        the request's service class and ``deadline`` its absolute
+        driver-clock deadline — both are policy inputs for the
+        scheduler, the engine itself never reads them."""
 
         prompt = list(prompt)
         if not prompt:
@@ -260,83 +319,233 @@ class Server:
                 f"context - max_new = {limit} tokens")
         req = Request(rid=len(self.completed) + len(self.queue) +
                       sum(r is not None for r in self.slot_req),
-                      prompt=prompt, max_new=max_new)
+                      prompt=prompt, max_new=max_new, slo=slo,
+                      deadline=deadline)
         req._frames = frames  # type: ignore[attr-defined]
         self.queue.append(req)
         return req
 
-    def _admit(self) -> None:
-        for slot in range(self.batch):
-            if self.slot_req[slot] is None and self.queue:
-                req = self._pick_next()
-                if req is None:
-                    return
-                self.slot_req[slot] = req
-                self.slot_pos[slot] = 0
-                self._slot_seq[slot] = self._seq
-                self._seq += 1
-                req._cursor = 0  # type: ignore[attr-defined]
-                if self._slot_dirty[slot]:
-                    self._reset_recurrent_state(slot)
-                    self._slot_dirty[slot] = False
-                frames = getattr(req, "_frames", None)
-                if self.api.cfg.is_encdec and frames is not None:
-                    kv = self.api.encode_cross_kv(
-                        self.params, jnp.asarray(frames)[None])
-                    xk, xv = self.state["xattn"]["k"], self.state["xattn"]["v"]
-                    self.state["xattn"]["k"] = xk.at[:, slot].set(
-                        kv["k"][:, 0].astype(xk.dtype))
-                    self.state["xattn"]["v"] = xv.at[:, slot].set(
-                        kv["v"][:, 0].astype(xv.dtype))
+    # -- scheduler-facing queries (the policy contract) ---------------------
 
-    def _pick_next(self) -> Request | None:
-        """Next request to admit.  Contiguous mode: strict FIFO (a free
-        slot always has a full ring reserved).  Paged mode: first-fit
-        over the queue — admit the oldest request whose PROMPT fits the
-        currently free pages (decode growth is alloc-on-demand, covered
-        by deferral), so a long prompt waiting for pages does not block
-        shorter traffic behind it."""
+    def live_slots(self) -> list[int]:
+        return [s for s in range(self.batch)
+                if self.slot_req[s] is not None]
+
+    def has_free_slot(self) -> bool:
+        return any(r is None for r in self.slot_req)
+
+    def slot_seq(self, slot: int) -> int:
+        """Admission order of the slot's occupant (higher = younger)."""
+
+        return int(self._slot_seq[slot])
+
+    def slot_request(self, slot: int) -> Request | None:
+        return self.slot_req[slot]
+
+    def admit_fits(self, req: Request) -> bool:
+        """Would ``req``'s pages fit right now?  Contiguous mode always
+        fits (a free slot has a full ring reserved); paged mode needs
+        the full stream's pages minus any full pages a live shared
+        prefix would map in for free."""
 
         if not self.paged:
-            return self.queue.pop(0)
-        for i, req in enumerate(self.queue):
-            if self.alloc.fits(len(req.prompt)):
-                return self.queue.pop(i)
-        return None
+            return True
+        total = len(req.prompt) + len(req.out)
+        need = self.alloc.pages_needed(total)
+        if self.share_prefix:
+            _, shared = self._find_share_source(req)
+            need -= shared // self.alloc.spec.page_size
+        return (need <= self.alloc.spec.pages_per_slot
+                and need <= self.alloc.free_pages)
 
-    def _defer_youngest(self) -> int | None:
-        """Page-OOM backpressure: evict the YOUNGEST active slot — the
-        one with the least sunk prefill/decode work — release its pages
-        and requeue its request (front of queue) for a fresh start.
-        The oldest slot is never deferred before all younger ones, so
-        it always progresses and the server cannot livelock."""
+    def shared_prefix_len(self, req: Request) -> int:
+        """Tokens a placement of ``req`` would map in via COW sharing
+        right now (0 when sharing is off or nothing matches)."""
 
-        live = [s for s in range(self.batch)
-                if self.slot_req[s] is not None]
-        if not live:
-            return None
-        victim = max(live, key=lambda s: self._slot_seq[s])
-        req = self.slot_req[victim]
+        if not self.share_prefix:
+            return 0
+        _, shared = self._find_share_source(req)
+        return shared
+
+    def is_share_source(self, slot: int) -> bool:
+        """Does ``slot`` map at least one refcount>1 page?"""
+
+        if self.alloc is None:
+            return False
+        return any(int(self.alloc.refcount[p]) > 1
+                   for p in self.alloc.slot_pages(slot))
+
+    # -- admission / placement / preemption ---------------------------------
+
+    def _admit(self) -> None:
+        # proactive SLO preemption first: the policy may evict live
+        # low-class slots so waiting high-class arrivals run this tick
+        # (bounded by batch — each eviction frees a slot, and a policy
+        # only volunteers strictly-lower-class victims, so this cannot
+        # churn)
+        for _ in range(self.batch):
+            if not self.queue:
+                break
+            victim = self.scheduler.preempt_for(self)
+            if victim is None:
+                break
+            self._preempt(victim)
+            self.preemptions += 1
+        for slot in range(self.batch):
+            if self.slot_req[slot] is None and self.queue:
+                idx = self.scheduler.pick(self)
+                if idx is None:
+                    return
+                self._place(slot, self.queue.pop(idx))
+
+    def _place(self, slot: int, req: Request) -> None:
+        """Bind ``req`` to ``slot``: recurrent-state hygiene, the COW
+        prefix share (paged + ``share_prefix``), and the prefill target
+        — ``len(prompt) + len(out)``, so a preempted request re-prefills
+        its generated tokens too and resumes exactly where it left
+        off."""
+
+        self.slot_req[slot] = req
+        self._slot_seq[slot] = self._seq
+        self._seq += 1
+        if self._slot_dirty[slot]:
+            self._reset_recurrent_state(slot)
+            self._slot_dirty[slot] = False
+        req._prefill_target = (len(req.prompt)  # type: ignore[attr-defined]
+                               + len(req.out))
+        start = 0
+        if self.share_prefix:
+            src, shared = self._find_share_source(req)
+            if src is not None and self.alloc.share(src, slot, shared):
+                start = shared
+                req.shared_prefix = max(req.shared_prefix, shared)
+                self.share_hits += 1
+                self.shared_tokens += shared
+        self.slot_pos[slot] = start
+        req._cursor = start  # type: ignore[attr-defined]
+        frames = getattr(req, "_frames", None)
+        if self.api.cfg.is_encdec and frames is not None:
+            kv = self.api.encode_cross_kv(
+                self.params, jnp.asarray(frames)[None])
+            xk, xv = self.state["xattn"]["k"], self.state["xattn"]["v"]
+            self.state["xattn"]["k"] = xk.at[:, slot].set(
+                kv["k"][:, 0].astype(xk.dtype))
+            self.state["xattn"]["v"] = xv.at[:, slot].set(
+                kv["v"][:, 0].astype(xv.dtype))
+
+    def _backed_prefix(self, slot: int) -> int:
+        """Tokens from position 0 whose pages ``slot`` still maps (SWA
+        trim can have freed low pages — those positions cannot be
+        shared from)."""
+
+        n = 0
+        for p in self.alloc.page_table[slot]:
+            if p == NO_PAGE:
+                break
+            n += 1
+        return n * self.alloc.spec.page_size
+
+    def _find_share_source(self, req: Request) -> tuple[int | None, int]:
+        """The live slot with the longest written, still-backed common
+        prefix against ``req``'s stream, capped one short of the stream
+        (at least one token must prefill to emit the next).  Sub-page
+        matches return (None, 0): they would save no whole page and
+        immediately pay a COW copy."""
+
+        stream = req.prompt + req.out
+        cap = len(stream) - 1
+        best, best_len = None, 0
+        for s in range(self.batch):
+            src = self.slot_req[s]
+            if src is None:
+                continue
+            written = (src.prompt + src.out)[:int(self.slot_pos[s])]
+            m = min(len(written), cap, self._backed_prefix(s))
+            n = 0
+            while n < m and stream[n] == written[n]:
+                n += 1
+            if n > best_len:
+                best, best_len = s, n
+        if best_len < self.alloc.spec.page_size:
+            return None, 0
+        return best, best_len
+
+    def _preempt(self, slot: int) -> None:
+        """Evict ``slot`` mid-flight: pages released (refcounts
+        decremented — pages shared with other slots survive), request
+        requeued at the FRONT with prompt and generated tokens intact.
+        On re-admission the whole stream re-prefills through the
+        chunked path, which emits the same next token the undisturbed
+        slot would have — chunked prefill is tokenwise-exact — so
+        preemption never changes a request's output."""
+
+        req = self.slot_req[slot]
         req._cursor = 0  # type: ignore[attr-defined]
-        req.out.clear()
+        req.preempted += 1
         self.queue.insert(0, req)
-        self.alloc.release(victim)
-        self.slot_req[victim] = None
-        self.slot_pos[victim] = 0
-        self._slot_dirty[victim] = True
-        self.deferrals += 1
+        if self.paged:
+            self.alloc.release(slot)
+        self.slot_req[slot] = None
+        self.slot_pos[slot] = 0
+        self._slot_dirty[slot] = True
+
+    def _evict_for(self, slot: int) -> int | None:
+        """Page-OOM backpressure: the policy names a victim, the engine
+        preempts it.  Returns the victim (None = nothing live)."""
+
+        victim = self.scheduler.victim(self)
+        if victim is not None:
+            self._preempt(victim)
+            self.deferrals += 1
         return victim
 
     def _ensure_pages(self, slot: int, n_tokens: int) -> bool:
-        """Back ``slot`` through ``n_tokens`` positions, deferring
-        youngest slots until the allocation fits; False when ``slot``
-        itself was deferred (skip it this tick)."""
+        """Back ``slot`` through ``n_tokens`` positions, evicting
+        policy-chosen victims until the allocation fits; False when
+        ``slot`` itself was evicted (skip it this tick)."""
 
         while not self.alloc.ensure(slot, n_tokens):
-            victim = self._defer_youngest()
+            victim = self._evict_for(slot)
             if victim is None or victim == slot:
                 return False
         return True
+
+    def _cow_range(self, slot: int, start: int,
+                   end: int) -> list[tuple[int, int]]:
+        """Break page sharing before ``slot`` writes positions
+        ``[start, end)``; same eviction backpressure as
+        :meth:`_ensure_pages` when the copy needs pages the free list
+        lacks.  Returns the (src, dst) pairs for :meth:`_copy_pages`
+        (empty when nothing was shared or ``slot`` itself was
+        evicted)."""
+
+        while True:
+            pairs = self.alloc.cow_pages(slot, start, end)
+            if pairs is not None:
+                return pairs
+            victim = self._evict_for(slot)
+            if victim is None or victim == slot:
+                return []
+
+    def _copy_pages(self, pairs: list[tuple[int, int]]) -> None:
+        """Device half of COW: clone src pages' K/V into the fresh dst
+        pages across every block's pool (page dim = axis 1 of the
+        stacked kv leaves).  The table already points at dst; positions
+        beyond the writer's own validity hold the source's garbage,
+        which the position mask keeps unattended until overwritten."""
+
+        src = jnp.asarray(np.array([p[0] for p in pairs], np.int32))
+        dst = jnp.asarray(np.array([p[1] for p in pairs], np.int32))
+        blocks = dict(self.state["blocks"])
+        for key, entry in blocks.items():
+            if "kv" not in entry:
+                continue
+            entry = dict(entry)
+            entry["kv"] = jax.tree.map(
+                lambda a: a.at[:, dst].set(a[:, src]), entry["kv"])
+            blocks[key] = entry
+        self.state = {**self.state, "blocks": blocks}
+        self.cow_copies += len(pairs)
 
     def _reset_recurrent_state(self, slot: int) -> None:
         """Zero a reused slot's SSM/conv state: position masking hides
@@ -357,7 +566,7 @@ class Server:
     def _phase(self, slot: int) -> str:
         req = self.slot_req[slot]
         cur = req._cursor  # type: ignore[attr-defined]
-        return "prefill" if cur < len(req.prompt) else "decode"
+        return "prefill" if cur < req._prefill_target else "decode"
 
     def _retire_if_done(self, slot: int) -> None:
         req = self.slot_req[slot]
@@ -372,8 +581,8 @@ class Server:
 
     def kv_stats(self) -> dict[str, float]:
         """Cache occupancy snapshot: live tokens vs reserved capacity
-        (plus allocator fragmentation and deferral counters in paged
-        mode) — the quantity ``bench_paged`` tables."""
+        (plus allocator fragmentation/sharing and eviction counters in
+        paged mode) — the quantity ``bench_paged`` tables."""
 
         live = sum(int(self.slot_pos[s]) for s in range(self.batch)
                    if self.slot_req[s] is not None)
@@ -391,19 +600,27 @@ class Server:
 
     def stats(self) -> dict[str, float]:
         """Per-drain engine-counter snapshot: how many ticks the drain
-        took, what they produced, and how speculation performed —
-        surfaced by ``timed_server_drain(stats_out=...)`` so tunable
-        ``measure()`` provenance and the serving benchmarks can record
-        real accept rates next to wall-clock."""
+        took, what they produced, how speculation performed, and what
+        the policy did (evictions, COW sharing) — surfaced by
+        ``timed_server_drain(stats_out=...)`` /
+        ``timed_trace_drain(stats_out=...)`` so tunable ``measure()``
+        provenance and the serving benchmarks record real counters next
+        to wall-clock."""
 
         g = self.tokens_generated
         return {
             "ticks": float(self.ticks),
             "tokens_generated": float(g),
             "ticks_per_token": (self.ticks / g) if g else 0.0,
+            "mean_active": (self.slot_ticks / self.ticks
+                            if self.ticks else 0.0),
             "prefill_chunks": float(self.prefill_chunks),
             "deferrals": float(self.deferrals),
+            "preemptions": float(self.preemptions),
             "peak_active": float(self.peak_active),
+            "share_hits": float(self.share_hits),
+            "shared_tokens": float(self.shared_tokens),
+            "cow_copies": float(self.cow_copies),
             "spec_ticks": float(self.spec_ticks),
             "spec_proposed": float(self.spec_proposed),
             "spec_accepted": float(self.spec_accepted),
@@ -440,47 +657,55 @@ class Server:
         """One engine iteration; returns number of active slots.
 
         Decoding slots advance one token through ``decode_step``;
-        prefilling slots advance up to ``prefill_chunk`` prompt tokens
-        through ``prefill_step`` — the chunk that consumes a prompt's
-        last token also yields the request's first generated token,
-        exactly as the tokenwise tick that fed the last prompt token
-        did.
+        prefilling slots advance up to ``prefill_chunk`` stream tokens
+        through ``prefill_step`` — the chunk that consumes a stream's
+        last token also yields the request's next generated token,
+        exactly as the tokenwise tick that fed that token would have.
 
         Paged mode first backs every slot's positions for this tick
-        (oldest slot first); a slot the allocator cannot cover — even
-        after deferring every younger one — is itself deferred and sits
-        the tick out."""
+        (admission order) and breaks COW sharing for every position
+        about to be written; a slot the allocator cannot cover — even
+        after evicting every policy-offered victim — is itself evicted
+        and sits the tick out."""
 
         self._admit()
         drafts = self._propose_drafts()
         if self.paged:
+            cow_pairs: list[tuple[int, int]] = []
             order = sorted((s for s in range(self.batch)
                             if self.slot_req[s] is not None),
                            key=lambda s: self._slot_seq[s])
             for s in order:
                 req = self.slot_req[s]
-                if req is None:          # deferred as a younger victim
+                if req is None:          # evicted as an earlier victim
                     continue
+                pos = int(self.slot_pos[s])
                 if self._phase(s) == "decode":
-                    pos = int(self.slot_pos[s])
+                    end = pos + 1
                     if s in drafts:
                         # opportunistic draft backing: shrink the draft
                         # to whatever the free list covers WITHOUT
-                        # deferring a neighbour — speculation must
+                        # evicting a neighbour — speculation must
                         # never evict a slot a plain decode wouldn't
                         dr = drafts.pop(s)
                         for dd in range(len(dr), 0, -1):
                             if self.alloc.ensure(s, pos + dd + 1):
                                 drafts[s] = dr[:dd]
+                                end = pos + dd + 1
                                 break
-                        if s in drafts:
-                            continue
-                    need = pos + 1
+                    if s not in drafts and \
+                            not self._ensure_pages(s, pos + 1):
+                        continue
                 else:
                     cur = req._cursor  # type: ignore[attr-defined]
-                    n = min(self.prefill_chunk, len(req.prompt) - cur)
-                    need = int(self.slot_pos[s]) + n
-                self._ensure_pages(s, need)
+                    n = min(self.prefill_chunk, req._prefill_target - cur)
+                    end = pos + n
+                    if not self._ensure_pages(s, end):
+                        continue
+                if self.share_prefix and self.slot_req[s] is req:
+                    cow_pairs.extend(self._cow_range(s, pos, end))
+            if cow_pairs:
+                self._copy_pages(cow_pairs)
             self.peak_used_pages = max(self.peak_used_pages,
                                        self.alloc.used_pages)
         active = [s for s in range(self.batch) if self.slot_req[s] is not None]
@@ -488,6 +713,7 @@ class Server:
         if not active:
             return 0
         self.ticks += 1
+        self.slot_ticks += len(active)
         decode = [s for s in active if self._phase(s) == "decode"]
         spec = [s for s in decode if s in drafts]
         decode = [s for s in decode if s not in drafts]
@@ -573,8 +799,11 @@ class Server:
             for s in prefill:
                 req = self.slot_req[s]
                 cur = req._cursor  # type: ignore[attr-defined]
-                n = min(T, len(req.prompt) - cur)
-                tokens[s, :n] = req.prompt[cur:cur + n]
+                # the stream includes generated tokens: a preempted
+                # request re-prefills prompt + out and resumes exactly
+                stream = req.prompt + req.out
+                n = min(T, req._prefill_target - cur)
+                tokens[s, :n] = stream[cur:cur + n]
                 lengths[s] = n
             extra = (page_table,) if self.paged else ()
             logits, self.state = self._prefill_step(
@@ -587,7 +816,7 @@ class Server:
                 n = int(lengths[s])
                 req._cursor += n  # type: ignore[attr-defined]
                 self.slot_pos[s] += n
-                if req._cursor >= len(req.prompt):
+                if req._cursor >= req._prefill_target:
                     req.out.append(int(nxt[s]))
                     self.tokens_generated += 1
                     self._retire_if_done(s)
@@ -610,454 +839,28 @@ class Server:
 
 
 # ---------------------------------------------------------------------------
-# serving-configuration tuning (repro.tune)
+# compatibility re-exports: the serving tunables and their harnesses
+# moved to repro.runtime.tunables (and the policies to
+# repro.runtime.scheduler) when the scheduler subsystem landed; every
+# pre-move import path keeps working through these.
 # ---------------------------------------------------------------------------
 
-
-KV_CACHE_BYTES = 2          # bf16 cache entries
-K_AND_V = 2                 # two tensors per layer
-
-
-def timed_server_drain(api: ModelAPI, params, *, batch: int, context: int,
-                       prompts, max_new: int, prefill_chunk: int = 32,
-                       paged: bool = False, page_size: int = 16,
-                       kv_pages: int | None = None, speculate: Any = None,
-                       spec_depth: int = 4,
-                       stats_out: dict | None = None, warmup: int = 1,
-                       iters: int = 1) -> float:
-    """Median wall-clock microseconds to drain ``prompts`` (a list of
-    token lists) through a fresh :class:`Server` — the one measurement
-    harness behind every serving tunable's ``measure(cfg)``
-    (:class:`DecodeBatchTunable`, :class:`PrefillChunkTunable`,
-    :class:`KVPageTunable`, :class:`~repro.runtime.speculate.\
-SpecDepthTunable`).  Warmup drains absorb the step compiles for the
-    batch/chunk shape.  ``speculate``/``spec_depth`` pass through to
-    :class:`Server` (hand a shared Drafter INSTANCE across calls to
-    reuse a draft model's jit cache).  ``stats_out`` (a dict) receives
-    the last drain's :meth:`Server.stats` snapshot — real
-    proposed/accepted counts for measure() provenance."""
-
-    from ..kernels.common import time_fn
-    prompts = [list(p) for p in prompts]
-
-    def drain() -> None:
-        srv = Server(api, params, batch=batch, context=context,
-                     prefill_chunk=prefill_chunk, paged=paged,
-                     page_size=page_size, kv_pages=kv_pages,
-                     speculate=speculate, spec_depth=spec_depth)
-        for prompt in prompts:
-            srv.submit(prompt, max_new=max_new)
-        srv.run_until_drained()
-        if stats_out is not None:
-            stats_out.clear()
-            stats_out.update(srv.stats())
-
-    return time_fn(drain, warmup=warmup, iters=iters)
-
-
-def _require_model(tunable, helper: str) -> None:
-    if tunable.api is None or tunable.params is None:
-        raise RuntimeError(
-            f"{type(tunable).__name__}.measure needs the model attached: "
-            f"construct with api=/params= ({helper})")
-
-
-def kv_cache_stream_s(batch: int, layers: int, cache_len: int,
-                      kv_width: int) -> float:
-    """Seconds to stream every slot's KV cache once (one engine tick's
-    cache traffic).  GQA caches are ``n_kv_heads * hd`` elements wide —
-    modeling them as ``d_model`` overestimated KV reads by the
-    ``n_heads / n_kv_heads`` grouping ratio and biased slot-count picks
-    low.  Shared by :class:`DecodeBatchTunable` and
-    :class:`PrefillChunkTunable`."""
-
-    return (batch * layers * cache_len * kv_width
-            * K_AND_V * KV_CACHE_BYTES / HBM_BW)
-
-
-@dataclass(frozen=True)
-class DecodeBatchTunable:
-    """``repro.tune`` Tunable: the server's slot count.
-
-    Decode is HBM-bound: each engine tick re-streams the weights once
-    (amortized over every active slot) and reads each slot's KV cache.
-    More slots amortize the weight stream but add KV traffic and admit
-    waves of requests; the grid engine picks the drain-time optimum for
-    an expected load (request count × mean new tokens).
-
-    With ``api``/``params`` attached (``choose_batch(..., params=...)``)
-    the tunable also implements ``measure(cfg)`` — a real :class:`Server`
-    drain at that slot count — so ``engine="measure"`` can refine the
-    modeled pick against wall-clock."""
-
-    param_bytes: int
-    layers: int
-    d_model: int
-    context: int
-    requests: int
-    mean_new: int
-    max_batch: int = 64
-    dispatch_s: float = 50e-6
-    # GQA KV-cache width in elements (n_kv_heads * hd); 0 falls back to
-    # d_model (the pre-fix overestimate) for old call sites
-    kv_width: int = 0
-    # hardware-in-the-loop handles: excluded from identity/caching
-    api: Any = field(default=None, repr=False, compare=False)
-    params: Any = field(default=None, repr=False, compare=False)
-    name: ClassVar[str] = "serve.decode_batch"
-
-    def space(self) -> SearchSpace:
-        sizes = []
-        b = 1
-        while b <= self.max_batch:
-            sizes.append(b)
-            b *= 2
-        return SearchSpace(params=[Param("batch", tuple(sizes))])
-
-    def cost(self, cfg: Mapping[str, Any]) -> float:
-        """Modeled microseconds to drain the expected load (same unit
-        as ``measure`` so modeled/measured entries are comparable)."""
-
-        b = cfg["batch"]
-        weight_s = self.param_bytes / HBM_BW
-        kv_s = kv_cache_stream_s(b, self.layers, self.context,
-                                 self.kv_width or self.d_model)
-        tick_s = weight_s + kv_s + self.dispatch_s
-        waves = -(-self.requests // b)
-        return waves * self.mean_new * tick_s * 1e6
-
-    def measure(self, cfg: Mapping[str, Any], *, warmup: int = 1,
-                iters: int = 1, prompt_len: int = 4) -> float:
-        """Wall-clock microseconds to drain the expected load through a
-        real :class:`Server` at this slot count."""
-
-        _require_model(self, "choose_batch(..., params=...)")
-        plen = max(1, min(prompt_len, self.context - self.mean_new - 1))
-        return timed_server_drain(
-            self.api, self.params, batch=int(cfg["batch"]),
-            context=self.context,
-            prompts=[range(1, plen + 1)] * self.requests,
-            max_new=self.mean_new, warmup=warmup, iters=iters)
-
-    def fingerprint(self) -> dict[str, Any]:
-        fp = {f.name: getattr(self, f.name)
-              for f in dataclasses.fields(self) if f.compare}
-        # "unit" keys out stale entries from before cost() switched from
-        # seconds to microseconds (same fields, 1e6-different meaning)
-        return {"tunable": self.name, "unit": "us", **fp}
-
-
-def decode_batch_tunable(api: ModelAPI, *, context: int, requests: int,
-                         max_new: int, params=None) -> DecodeBatchTunable:
-    """The server-slot tunable for this model + expected load — the one
-    place the sizing wiring lives (library ``choose_batch`` and the
-    ``launch/serve --tune-batch`` CLI both build through here)."""
-
-    return DecodeBatchTunable(param_bytes=api.param_count() * 2,
-                              layers=api.cfg.n_layers,
-                              d_model=api.cfg.d_model, context=context,
-                              requests=requests, mean_new=max_new,
-                              kv_width=api.cfg.n_kv_heads * api.cfg.hd,
-                              api=api, params=params)
-
-
-def choose_batch(api: ModelAPI, *, context: int, requests: int,
-                 max_new: int, cache="default", params=None,
-                 engine: str = "grid", **tune_kw):
-    """Pick the slot count for :class:`Server` via ``repro.tune``;
-    returns ``(batch, TuneResult)``.
-
-    ``engine="measure"`` (requires ``params``) shortlists slot counts
-    through the drain-time model, then times real server drains and
-    returns the wall-clock winner."""
-
-    from ..tune import tune as _tune
-    tb = decode_batch_tunable(api, context=context, requests=requests,
-                              max_new=max_new, params=params)
-    res = _tune(tb, engine=engine, cache=cache, **tune_kw)
-    return int(res.best_config["batch"]), res
-
-
-@dataclass(frozen=True)
-class PrefillChunkTunable:
-    """``repro.tune`` Tunable: tokens per chunked-prefill tick
-    (``Server(prefill_chunk=...)``).
-
-    Chunked prefill amortizes the per-tick weight stream over ``chunk``
-    prompt tokens, so a prompt costs ``ceil(len/chunk)`` ticks instead
-    of ``len`` — but each tick spends chunk-linear matmul FLOPs and a
-    chunk-quadratic attention-score term, so the optimum is a genuine
-    tradeoff, not "as big as possible".  ``cost`` models the drain of
-    the expected long-prompt load (``requests`` prompts of
-    ``prompt_len`` tokens + ``mean_new`` decode steps each) in
-    microseconds; with ``api``/``params`` attached, ``measure(cfg)``
-    drains a real :class:`Server` at that chunk size so
-    ``engine="measure"`` can return the wall-clock winner."""
-
-    param_bytes: int
-    layers: int
-    d_model: int
-    kv_width: int               # GQA cache width, n_kv_heads * hd
-    context: int
-    prompt_len: int
-    requests: int
-    mean_new: int
-    batch: int = 4
-    max_chunk: int = 256
-    dispatch_s: float = 50e-6
-    # hardware-in-the-loop handles: excluded from identity/caching
-    api: Any = field(default=None, repr=False, compare=False)
-    params: Any = field(default=None, repr=False, compare=False)
-    name: ClassVar[str] = "serve.prefill_chunk"
-
-    def space(self) -> SearchSpace:
-        sizes = []
-        c = 1
-        cap = min(self.max_chunk, self.context)
-        while c <= cap:
-            sizes.append(c)
-            if c >= self.prompt_len:    # larger chunks cannot help
-                break
-            c *= 2
-        return SearchSpace(params=[Param("chunk", tuple(sizes))])
-
-    def cost(self, cfg: Mapping[str, Any]) -> float:
-        """Modeled microseconds to drain the load (same unit as
-        ``measure``): per prefill tick, one weight stream (amortized
-        over the chunk — the term chunking exists to shrink), one KV
-        stream (GQA width, shared with :class:`DecodeBatchTunable`),
-        chunk-linear matmul FLOPs, and a chunk-quadratic score/HBM term;
-        decode ticks follow the decode-batch model."""
-
-        chunk = cfg["chunk"]
-        n_params = self.param_bytes / 2            # bf16 weights
-        weight_s = self.param_bytes / HBM_BW
-        kv_s = kv_cache_stream_s(self.batch, self.layers, self.context,
-                                 self.kv_width)
-        flops_s = 2 * n_params * chunk * self.batch / PEAK_FLOPS
-        score_s = (self.batch * self.layers * chunk
-                   * (self.context + chunk) * 4 / HBM_BW)
-        prefill_tick_s = (weight_s + kv_s + flops_s + score_s
-                          + self.dispatch_s)
-        decode_tick_s = (weight_s + kv_s
-                         + 2 * n_params * self.batch / PEAK_FLOPS
-                         + self.dispatch_s)
-        prefill_ticks = -(-self.prompt_len // chunk)
-        waves = -(-self.requests // self.batch)
-        return waves * (prefill_ticks * prefill_tick_s
-                        + self.mean_new * decode_tick_s) * 1e6
-
-    def measure(self, cfg: Mapping[str, Any], *, warmup: int = 1,
-                iters: int = 1) -> float:
-        """Wall-clock microseconds to drain the long-prompt load through
-        a real :class:`Server` at this chunk size."""
-
-        _require_model(self, "choose_prefill_chunk(..., params=...)")
-        if self.prompt_len > self.context - self.mean_new:
-            # silently clamping here would measure a different load than
-            # cost() models and the cache fingerprint claims
-            raise ValueError(
-                f"prompt_len={self.prompt_len} + mean_new={self.mean_new} "
-                f"exceeds context={self.context}; size the tunable to the "
-                f"load it will actually serve (prefill_chunk_tunable "
-                f"clamps for you)")
-        vocab = self.api.cfg.vocab
-        prompt = [i % (vocab - 1) + 1 for i in range(self.prompt_len)]
-        return timed_server_drain(
-            self.api, self.params, batch=self.batch, context=self.context,
-            prompts=[prompt] * self.requests, max_new=self.mean_new,
-            prefill_chunk=int(cfg["chunk"]), warmup=warmup, iters=iters)
-
-    def fingerprint(self) -> dict[str, Any]:
-        fp = {f.name: getattr(self, f.name)
-              for f in dataclasses.fields(self) if f.compare}
-        return {"tunable": self.name, "unit": "us", **fp}
-
-
-def prefill_chunk_tunable(api: ModelAPI, *, context: int, prompt_len: int,
-                          requests: int, max_new: int, batch: int,
-                          max_chunk: int = 256,
-                          params=None) -> PrefillChunkTunable:
-    """The chunked-prefill tunable for this model + expected load — the
-    one place the sizing wiring lives (library ``choose_prefill_chunk``
-    and the ``launch/serve --tune-prefill`` CLI both build through
-    here)."""
-
-    # clamp UP FRONT so cost(), measure() and the cache fingerprint all
-    # describe the same load
-    prompt_len = max(1, min(prompt_len, context - max_new))
-    return PrefillChunkTunable(param_bytes=api.param_count() * 2,
-                               layers=api.cfg.n_layers,
-                               d_model=api.cfg.d_model,
-                               kv_width=api.cfg.n_kv_heads * api.cfg.hd,
-                               context=context, prompt_len=prompt_len,
-                               requests=requests, mean_new=max_new,
-                               batch=batch, max_chunk=max_chunk,
-                               api=api, params=params)
-
-
-def choose_prefill_chunk(api: ModelAPI, *, context: int, prompt_len: int,
-                         requests: int, max_new: int, batch: int,
-                         cache="default", params=None,
-                         engine: str = "grid", **tune_kw):
-    """Pick ``Server``'s ``prefill_chunk`` via ``repro.tune``; returns
-    ``(chunk, TuneResult)``.  ``engine="measure"`` (requires ``params``)
-    shortlists chunk sizes through the drain-time model, then times real
-    long-prompt server drains and returns the wall-clock winner."""
-
-    from ..tune import tune as _tune
-    tb = prefill_chunk_tunable(api, context=context, prompt_len=prompt_len,
-                               requests=requests, max_new=max_new,
-                               batch=batch, params=params)
-    res = _tune(tb, engine=engine, cache=cache, **tune_kw)
-    return int(res.best_config["chunk"]), res
-
-
-@dataclass(frozen=True)
-class KVPageTunable:
-    """``repro.tune`` Tunable: the paged KV-cache page size
-    (``Server(paged=True, page_size=...)``).
-
-    The page size trades **internal fragmentation** against **gather
-    overhead**: every live request strands the unused tail of its last
-    page (~``page/2`` tokens expected), shrinking how many requests a
-    fixed pool holds concurrently — so big pages mean more drain waves;
-    but every attended token is reached through the page table, and
-    smaller pages mean more page descriptors per tick.  ``cost`` models
-    the drain of a MIXED-length load (``prompt_lens`` cycled over
-    ``requests``, ``mean_new`` decode steps each, ``batch`` slots
-    sharing ``pool_tokens`` of page capacity) in microseconds; with
-    ``api``/``params`` attached, ``measure(cfg)`` drains the same mixed
-    load through a real paged :class:`Server`."""
-
-    param_bytes: int
-    layers: int
-    d_model: int
-    kv_width: int               # GQA cache width, n_kv_heads * hd
-    context: int
-    prompt_lens: tuple[int, ...]
-    requests: int
-    mean_new: int
-    batch: int = 4
-    pool_tokens: int = 0        # 0 -> batch * context (contiguous parity)
-    prefill_chunk: int = 32
-    max_page: int = 128
-    page_gather_s: float = 2e-6  # per page descriptor chased per tick
-    dispatch_s: float = 50e-6
-    # hardware-in-the-loop handles: excluded from identity/caching
-    api: Any = field(default=None, repr=False, compare=False)
-    params: Any = field(default=None, repr=False, compare=False)
-    name: ClassVar[str] = "serve.kv_page"
-
-    def __post_init__(self):
-        # plan specs deliver JSON lists; the fingerprint and lattice
-        # want a hashable tuple
-        object.__setattr__(self, "prompt_lens", tuple(self.prompt_lens))
-        if not self.prompt_lens:
-            raise ValueError("prompt_lens must name at least one length")
-
-    def _pool(self) -> int:
-        return self.pool_tokens or self.batch * self.context
-
-    def space(self) -> SearchSpace:
-        sizes = []
-        ps = 4
-        cap = min(self.max_page, self.context)
-        while ps <= cap:
-            sizes.append(ps)
-            ps *= 2
-        return SearchSpace(params=[Param("page", tuple(sizes))])
-
-    def cost(self, cfg: Mapping[str, Any]) -> float:
-        """Modeled microseconds to drain the mixed load (same unit as
-        ``measure``): requests occupy ``ceil(total/page)`` pages each —
-        the page-rounding waste caps how many run concurrently in the
-        pool — and each tick pays the weight stream, the live-KV
-        stream, and one page-table chase per live page."""
-
-        page = cfg["page"]
-        totals = [min(L, self.context - self.mean_new) + self.mean_new
-                  for L in self.prompt_lens]
-        mean_total = sum(totals) / len(totals)
-        # page-capacity footprint of one request, fragmentation included
-        footprint = sum(-(-t // page) * page for t in totals) / len(totals)
-        conc = max(1, min(self.batch, int(self._pool() // footprint)))
-        waves = -(-self.requests // conc)
-        mean_prompt = mean_total - self.mean_new
-        ticks = -(-int(mean_prompt) // self.prefill_chunk) + self.mean_new
-        weight_s = self.param_bytes / HBM_BW
-        kv_s = kv_cache_stream_s(conc, self.layers, int(mean_total),
-                                 self.kv_width)
-        gather_s = conc * -(-int(mean_total) // page) * self.page_gather_s
-        tick_s = weight_s + kv_s + gather_s + self.dispatch_s
-        return waves * ticks * tick_s * 1e6
-
-    def measure(self, cfg: Mapping[str, Any], *, warmup: int = 1,
-                iters: int = 1) -> float:
-        """Wall-clock microseconds to drain the mixed-length load
-        through a real paged :class:`Server` at this page size."""
-
-        _require_model(self, "choose_kv_page(..., params=...)")
-        page = int(cfg["page"])
-        vocab = self.api.cfg.vocab
-        prompts = []
-        for r in range(self.requests):
-            plen = min(self.prompt_lens[r % len(self.prompt_lens)],
-                       self.context - self.mean_new)
-            prompts.append([(r + i) % (vocab - 1) + 1 for i in range(plen)])
-        kv_pages = max(self._pool() // page, -(-self.context // page))
-        return timed_server_drain(
-            self.api, self.params, batch=self.batch, context=self.context,
-            prompts=prompts, max_new=self.mean_new,
-            prefill_chunk=self.prefill_chunk, paged=True, page_size=page,
-            kv_pages=kv_pages, warmup=warmup, iters=iters)
-
-    def fingerprint(self) -> dict[str, Any]:
-        fp = {f.name: getattr(self, f.name)
-              for f in dataclasses.fields(self) if f.compare}
-        fp["prompt_lens"] = list(self.prompt_lens)
-        return {"tunable": self.name, "unit": "us", **fp}
-
-
-def kv_page_tunable(api: ModelAPI, *, context: int, prompt_lens,
-                    requests: int, max_new: int, batch: int,
-                    pool_tokens: int | None = None,
-                    params=None) -> KVPageTunable:
-    """The page-size tunable for this model + expected mixed-length
-    load — the one place the sizing wiring lives (library
-    ``choose_kv_page`` and the ``launch/serve --tune-page`` CLI both
-    build through here)."""
-
-    prompt_lens = tuple(max(1, min(p, context - max_new))
-                        for p in prompt_lens)
-    return KVPageTunable(param_bytes=api.param_count() * 2,
-                         layers=api.cfg.n_layers, d_model=api.cfg.d_model,
-                         kv_width=api.cfg.n_kv_heads * api.cfg.hd,
-                         context=context, prompt_lens=prompt_lens,
-                         requests=requests, mean_new=max_new, batch=batch,
-                         pool_tokens=pool_tokens or 0,
-                         api=api, params=params)
-
-
-def choose_kv_page(api: ModelAPI, *, context: int, prompt_lens,
-                   requests: int, max_new: int, batch: int,
-                   pool_tokens: int | None = None, cache="default",
-                   params=None, engine: str = "grid", **tune_kw):
-    """Pick ``Server(paged=True)``'s page size via ``repro.tune``;
-    returns ``(page, TuneResult)``.  ``engine="measure"`` (requires
-    ``params``) shortlists page sizes through the fragmentation/gather
-    model, then times real mixed-length paged drains and returns the
-    wall-clock winner."""
-
-    from ..tune import tune as _tune
-    tb = kv_page_tunable(api, context=context, prompt_lens=prompt_lens,
-                         requests=requests, max_new=max_new, batch=batch,
-                         pool_tokens=pool_tokens, params=params)
-    res = _tune(tb, engine=engine, cache=cache, **tune_kw)
-    return int(res.best_config["page"]), res
-
-
-__all__ = ["Server", "Request", "DecodeBatchTunable", "PrefillChunkTunable",
-           "KVPageTunable", "decode_batch_tunable", "prefill_chunk_tunable",
-           "kv_page_tunable", "choose_batch", "choose_prefill_chunk",
-           "choose_kv_page", "kv_cache_stream_s", "timed_server_drain"]
+from .scheduler import SCHEDULER_KINDS  # noqa: E402,F401
+from .tunables import (K_AND_V, KV_CACHE_BYTES,  # noqa: E402,F401
+                       DecodeBatchTunable, KVPageTunable,
+                       PrefillChunkTunable, SchedulerTunable,
+                       _require_model, choose_batch, choose_kv_page,
+                       choose_prefill_chunk, choose_scheduler,
+                       decode_batch_tunable, kv_cache_stream_s,
+                       kv_page_tunable, prefill_chunk_tunable,
+                       scheduler_tunable, timed_server_drain,
+                       timed_trace_drain)
+
+__all__ = ["Server", "Request", "Scheduler", "make_scheduler",
+           "SCHEDULER_KINDS",
+           "DecodeBatchTunable", "PrefillChunkTunable", "KVPageTunable",
+           "SchedulerTunable", "decode_batch_tunable",
+           "prefill_chunk_tunable", "kv_page_tunable", "scheduler_tunable",
+           "choose_batch", "choose_prefill_chunk", "choose_kv_page",
+           "choose_scheduler", "kv_cache_stream_s", "timed_server_drain",
+           "timed_trace_drain"]

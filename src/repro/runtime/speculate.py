@@ -242,7 +242,7 @@ class SpecDepthTunable:
         drafter = str(cfg["drafter"])
         n_params = self.param_bytes / 2            # bf16 weights
         weight_s = self.param_bytes / HBM_BW
-        from .serve import kv_cache_stream_s
+        from .tunables import kv_cache_stream_s
         kv_s = kv_cache_stream_s(self.batch, self.layers, self.context,
                                  self.kv_width)
         flops_s = 2 * n_params * (d + 1) * self.batch / PEAK_FLOPS
@@ -274,7 +274,7 @@ class SpecDepthTunable:
         depth/drafter.  Prompts cycle a short pattern so the n-gram
         drafter sees the lookup structure real repetitive traffic has."""
 
-        from .serve import _require_model, timed_server_drain
+        from .tunables import _require_model, timed_server_drain
         _require_model(self, "choose_spec_depth(..., params=...)")
         vocab = self.api.cfg.vocab
         period = 4

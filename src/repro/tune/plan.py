@@ -108,9 +108,9 @@ def _ensure_builtin_factories() -> None:
     from ..kernels.matmul_tuned.ops import MatmulTunable
     from ..kernels.sweep_eval.ops import SweepEvalTunable
     from ..kernels.tuned_reduction.ops import ReductionTunable
-    from ..runtime.serve import (DecodeBatchTunable, KVPageTunable,
-                                 PrefillChunkTunable)
     from ..runtime.speculate import SpecDepthTunable
+    from ..runtime.tunables import (DecodeBatchTunable, KVPageTunable,
+                                    PrefillChunkTunable, SchedulerTunable)
     _FACTORIES.setdefault("kernels.matmul_tuned", MatmulTunable)
     _FACTORIES.setdefault("kernels.flash_attention", FlashAttentionTunable)
     _FACTORIES.setdefault("kernels.tuned_reduction", ReductionTunable)
@@ -119,6 +119,7 @@ def _ensure_builtin_factories() -> None:
     _FACTORIES.setdefault("serve.prefill_chunk", PrefillChunkTunable)
     _FACTORIES.setdefault("serve.kv_page", KVPageTunable)
     _FACTORIES.setdefault("serve.spec_depth", SpecDepthTunable)
+    _FACTORIES.setdefault("serve.scheduler", SchedulerTunable)
     _FACTORIES.setdefault("platform", _platform_factory)
     _FACTORIES.setdefault("tpu.distributed", _tpu_distributed_factory)
     _FACTORIES.setdefault("meta.engine", _meta_engine_factory)

@@ -141,6 +141,121 @@ def test_allocator_stats_fragmentation():
 
 
 # ---------------------------------------------------------------------------
+# copy-on-write sharing invariants
+# ---------------------------------------------------------------------------
+
+
+def test_allocator_share_maps_pages_and_bumps_refcounts():
+    alloc = make_alloc(page_size=4)
+    alloc.ensure(0, 10)                        # 3 pages
+    used_before = alloc.used_pages
+    assert alloc.share(0, 1, 8) == 2           # map the 2 full pages
+    assert alloc.slot_pages(1) == alloc.slot_pages(0)[:2]
+    assert alloc.used_pages == used_before     # no new physical pages
+    assert alloc.shared_pages == 2
+    for p in alloc.slot_pages(1):
+        assert alloc.refcount[p] == 2
+    assert alloc.refcount[alloc.slot_pages(0)[2]] == 1  # unshared page
+    # sharing covers the table: the sharer grows ABOVE the prefix only
+    assert alloc.ensure(1, 12)
+    assert len(alloc.slot_pages(1)) == 3
+    assert alloc.slot_pages(1)[2] != alloc.slot_pages(0)[2]
+
+
+def test_allocator_share_rejects_bad_src_or_dst():
+    alloc = make_alloc(page_size=4)
+    alloc.ensure(0, 10)
+    alloc.ensure(1, 4)
+    with pytest.raises(ValueError, match="not empty"):
+        alloc.share(0, 1, 8)                   # dst already holds pages
+    with pytest.raises(ValueError, match="does not back"):
+        alloc.share(0, 2, 16)                  # src backs only 10 tokens
+    assert alloc.share(0, 2, 0) == 0           # degenerate share is a noop
+    assert alloc.slot_pages(2) == []
+
+
+def test_allocator_shared_pages_survive_source_release():
+    alloc = make_alloc(page_size=4)
+    alloc.ensure(0, 10)                        # 3 pages
+    alloc.share(0, 1, 8)
+    shared = alloc.slot_pages(1)
+    assert alloc.release(0) == 3               # src lets go of all three
+    assert alloc.free_pages == 8 - 2           # only the unshared one freed
+    for p in shared:
+        assert alloc.refcount[p] == 1          # now exclusive to slot 1
+        assert alloc.owner[p] == 1             # ownership reassigned
+    assert alloc.release(1) == 2
+    assert alloc.free_pages == 8
+    assert not alloc.refcount.any()
+
+
+def test_allocator_sharer_release_keeps_source_pages():
+    alloc = make_alloc(page_size=4)
+    alloc.ensure(0, 8)
+    alloc.share(0, 1, 8)
+    assert alloc.release(1) == 2
+    assert alloc.free_pages == 8 - 2           # source still holds them
+    assert alloc.shared_pages == 0
+    for p in alloc.slot_pages(0):
+        assert alloc.refcount[p] == 1 and alloc.owner[p] == 0
+
+
+def test_allocator_cow_breaks_exactly_the_shared_pages_in_range():
+    alloc = make_alloc(page_size=4, n_pages=8)
+    alloc.ensure(0, 8)                         # 2 pages
+    alloc.share(0, 1, 6)                       # both pages, 2nd partial
+    # the sharer writes positions [6, 9): page 1 is shared (COW), page 2
+    # is unmapped (plain ensure territory, not COW's business)
+    pairs = alloc.cow_pages(1, 6, 9)
+    assert len(pairs) == 1
+    old, new = pairs[0]
+    assert old == alloc.slot_pages(0)[1]       # src keeps the original
+    assert alloc.page_table[1, 1] == new
+    assert alloc.refcount[old] == 1 and alloc.refcount[new] == 1
+    assert alloc.owner[new] == 1
+    assert alloc.shared_pages == 1             # page 0 still shared
+    # a second write to the now-private page needs no copy
+    assert alloc.cow_pages(1, 6, 9) == []
+
+
+def test_allocator_cow_is_all_or_nothing_under_pressure():
+    alloc = make_alloc(page_size=4, n_pages=2, n_slots=2,
+                       pages_per_slot=2)
+    alloc.ensure(0, 8)                         # both pages taken
+    alloc.share(0, 1, 6)
+    table_before = alloc.page_table.copy()
+    assert alloc.cow_pages(1, 4, 6) is None    # no free page for the copy
+    assert (alloc.page_table == table_before).all()
+    assert alloc.free_pages == 0
+
+
+def test_allocator_rewind_and_trim_deref_shared_pages():
+    alloc = make_alloc(page_size=4)
+    alloc.ensure(0, 8)
+    alloc.share(0, 1, 8)
+    free_before = alloc.free_pages
+    # the source trims its low page: still mapped by the sharer, so the
+    # page must NOT hit the free list (freed count is 0)
+    assert alloc.trim(0, 4) == 0
+    assert alloc.free_pages == free_before
+    assert alloc.refcount[alloc.slot_pages(1)[0]] == 1
+    # the sharer rewinds off its top page (also shared): same deal
+    assert alloc.rewind(1, 4) == 0
+    assert alloc.free_pages == free_before
+    # last holders letting go really free them
+    assert alloc.release(0) == 1
+    assert alloc.release(1) == 1
+    assert alloc.free_pages == 8
+
+
+def test_allocator_stats_reports_shared_pages():
+    alloc = make_alloc(page_size=4)
+    alloc.ensure(0, 8)
+    alloc.share(0, 1, 8)
+    assert alloc.stats()["shared_pages"] == 2.0
+
+
+# ---------------------------------------------------------------------------
 # paged attention numerics (unit level: shuffled physical pages)
 # ---------------------------------------------------------------------------
 
@@ -289,8 +404,9 @@ def test_paged_admission_waits_for_free_pages():
 
 def test_paged_oom_at_tick_defers_youngest_and_restarts():
     """Decode growth exhausting the pool mid-flight defers the YOUNGEST
-    slot (pages released, request restarted from scratch); the oldest
-    keeps progressing, both finish with solo-exact outputs."""
+    slot (pages released, request requeued with its progress kept and
+    re-prefilled on resume); the oldest keeps progressing, both finish
+    with solo-exact outputs."""
 
     cfg = get_config("smollm-135m").reduced().replace(
         logits_dtype="float32")

@@ -1,0 +1,447 @@
+"""Scheduler subsystem tests: policy registry, per-policy decisions
+(against a fake server), end-to-end preemption/prefix-sharing parity on
+real models, the seeded workload generator, and the ``serve.scheduler``
+tunable's plan/cache integration."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.runtime.scheduler import (SCHEDULER_KINDS, FCFSScheduler,
+                                     PrefixAffinityScheduler,
+                                     PriorityScheduler, make_scheduler)
+from repro.runtime.serve import Request, Server
+from repro.runtime.tunables import SchedulerTunable, scheduler_tunable
+from repro.runtime.workload import (TraceConfig, drive_trace,
+                                    generate_trace, summarize)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_kinds_and_aliases():
+    assert SCHEDULER_KINDS == ("fcfs", "prefix", "priority")
+    assert isinstance(make_scheduler(None), FCFSScheduler)
+    assert isinstance(make_scheduler("priority"), PriorityScheduler)
+    assert isinstance(make_scheduler("prefix-affinity"),
+                      PrefixAffinityScheduler)
+    inst = FCFSScheduler(age_limit=3)
+    assert make_scheduler(inst) is inst
+    with pytest.raises(ValueError, match="unknown scheduler"):
+        make_scheduler("sjf")
+    with pytest.raises(ValueError, match="kwargs"):
+        make_scheduler(inst, age_limit=5)
+
+
+def test_registry_kwargs_reach_the_policy():
+    s = make_scheduler("fcfs", age_limit=2)
+    assert s.age_limit == 2 and s.kind == "fcfs"
+
+
+# ---------------------------------------------------------------------------
+# policy decisions against a fake server (the scheduler contract)
+# ---------------------------------------------------------------------------
+
+
+class FakeServer:
+    """Just the scheduler-facing surface of ``Server``."""
+
+    def __init__(self, queue=(), slots=(), paged=True, fits=None,
+                 prefix_lens=None, sources=()):
+        self.queue = list(queue)
+        self.paged = paged
+        self._slots = list(slots)          # (slot, seq, Request)
+        self._fits = fits                  # None -> everything fits
+        self._prefix = prefix_lens or {}   # id(req) -> shared length
+        self._sources = set(sources)
+
+    def admit_fits(self, req):
+        return True if self._fits is None else self._fits(req)
+
+    def live_slots(self):
+        return [s for s, _, _ in self._slots]
+
+    def has_free_slot(self):
+        return False                       # callers construct full houses
+
+    def slot_seq(self, slot):
+        return next(seq for s, seq, _ in self._slots if s == slot)
+
+    def slot_request(self, slot):
+        return next(r for s, _, r in self._slots if s == slot)
+
+    def shared_prefix_len(self, req):
+        return self._prefix.get(id(req), 0)
+
+    def is_share_source(self, slot):
+        return slot in self._sources
+
+
+def _req(rid, plen=4, slo="interactive", deadline=None, skips=0):
+    r = Request(rid=rid, prompt=list(range(1, plen + 1)), max_new=4,
+                slo=slo, deadline=deadline)
+    r.skips = skips
+    return r
+
+
+def test_fcfs_first_fit_skips_oversized_and_ages_it():
+    big, small1, small2 = _req(0, plen=20), _req(1), _req(2)
+    srv = FakeServer(queue=[big, small1, small2],
+                     fits=lambda r: len(r.prompt) < 10)
+    sched = FCFSScheduler(age_limit=2)
+    assert sched.pick(srv) == 1            # big doesn't fit -> first small
+    assert big.skips == 1
+    srv.queue.pop(1)
+    assert sched.pick(srv) == 1 and big.skips == 2
+
+
+def test_fcfs_aging_barrier_stops_starvation():
+    """Regression for first-fit starvation: once the head request has
+    been bypassed ``age_limit`` times it becomes a barrier — younger
+    requests can no longer jump it, so pool drain flows to it."""
+
+    big = _req(0, plen=20, skips=2)
+    srv = FakeServer(queue=[big, _req(1), _req(2)],
+                     fits=lambda r: len(r.prompt) < 10)
+    sched = FCFSScheduler(age_limit=2)
+    assert sched.pick(srv) is None         # hold admission for the barrier
+    assert big.skips == 2                  # a held round is not a bypass
+    srv._fits = lambda r: True
+    assert sched.pick(srv) == 0            # pages freed -> barrier admits
+
+
+def test_fcfs_contiguous_admits_strictly_in_order():
+    srv = FakeServer(queue=[_req(0, plen=20), _req(1)], paged=False,
+                     fits=lambda r: False)
+    assert FCFSScheduler().pick(srv) == 0
+
+
+def test_fcfs_victim_is_youngest():
+    srv = FakeServer(slots=[(0, 5, _req(0)), (1, 9, _req(1)),
+                            (2, 7, _req(2))])
+    sched = FCFSScheduler()
+    assert sched.victim(srv) == 1
+    assert sched.preempt_for(srv) is None  # fcfs never preempts for SLO
+
+
+def test_priority_orders_class_then_deadline():
+    q = [_req(0, slo="batch"), _req(1, slo="interactive", deadline=90.0),
+         _req(2, slo="interactive", deadline=40.0)]
+    srv = FakeServer(queue=q)
+    assert PriorityScheduler().pick(srv) == 2      # EDF within interactive
+    assert q[0].skips == 1 and q[1].skips == 1     # both were bypassed
+
+
+def test_priority_aging_promotes_starved_batch_request():
+    q = [_req(0, slo="batch", skips=3), _req(1, slo="interactive")]
+    srv = FakeServer(queue=q)
+    assert PriorityScheduler(age_limit=3).pick(srv) == 0
+
+
+def test_priority_victim_lowest_class_youngest():
+    srv = FakeServer(slots=[(0, 1, _req(0, slo="batch")),
+                            (1, 2, _req(1, slo="interactive")),
+                            (2, 3, _req(2, slo="batch"))])
+    assert PriorityScheduler().victim(srv) == 2    # batch before interactive
+
+
+def test_priority_preempts_only_for_strictly_higher_class():
+    batch_house = [(0, 1, _req(0, slo="batch")), (1, 2, _req(1, slo="batch"))]
+    sched = PriorityScheduler()
+    srv = FakeServer(queue=[_req(9, slo="interactive")], slots=batch_house)
+    assert sched.preempt_for(srv) == 1             # youngest batch slot
+    srv = FakeServer(queue=[_req(9, slo="batch")], slots=batch_house)
+    assert sched.preempt_for(srv) is None          # equal class: no eviction
+    assert PriorityScheduler(preempt=False).preempt_for(
+        FakeServer(queue=[_req(9)], slots=batch_house)) is None
+
+
+def test_prefix_affinity_prefers_longest_shared_prefix():
+    q = [_req(0), _req(1), _req(2)]
+    srv = FakeServer(queue=q, prefix_lens={id(q[1]): 8, id(q[2]): 16})
+    assert PrefixAffinityScheduler().pick(srv) == 2
+    srv = FakeServer(queue=[_req(0), _req(1)])     # nothing shares
+    assert PrefixAffinityScheduler().pick(srv) == 0
+
+
+def test_prefix_affinity_victim_spares_share_sources():
+    srv = FakeServer(slots=[(0, 1, _req(0)), (1, 3, _req(1)),
+                            (2, 2, _req(2))], sources={1})
+    assert PrefixAffinityScheduler().victim(srv) == 2  # youngest non-source
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: preemption and prefix sharing on a real model
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_config("smollm-135m").reduced().replace(
+        logits_dtype="float32")
+    api = build_model(cfg)
+    return api, api.init(jax.random.PRNGKey(0))
+
+
+def _solo_out(api, params, prompt, max_new, **kw):
+    solo = Server(api, params, batch=1, context=48, **kw)
+    ref = solo.submit(list(prompt), max_new=max_new)
+    solo.run_until_drained()
+    return ref.out
+
+
+def test_priority_preemption_resumes_with_exact_output(model):
+    """An interactive arrival evicts the lone batch slot mid-decode; the
+    batch request keeps its generated tokens, re-prefills them on
+    resume, and still matches its undisturbed solo drain token for
+    token."""
+
+    api, params = model
+    long_p = list(range(1, 17))
+    short_p = [7, 5, 3, 2]
+    srv = Server(api, params, batch=1, context=48, paged=True, page_size=4,
+                 prefill_chunk=8, scheduler="priority")
+    rb = srv.submit(long_p, max_new=6, slo="batch")
+    for _ in range(4):
+        srv.tick()                         # batch request is decoding
+    assert rb.out                          # some progress to preserve
+    ri = srv.submit(short_p, max_new=4, slo="interactive", deadline=20.0)
+    srv.run_until_drained()
+    assert srv.preemptions >= 1 and rb.preempted >= 1
+    assert ri.done and rb.done
+    assert ri.out == _solo_out(api, params, short_p, 4, prefill_chunk=8)
+    assert rb.out == _solo_out(api, params, long_p, 6, prefill_chunk=8)
+    # and the interactive request finished first (that was the point)
+    assert srv.completed[0] is ri
+
+
+def test_shared_prefix_drain_matches_unshared_token_for_token(model):
+    """COW prefix sharing is an allocation change, not a semantics
+    change: staggered sharers must emit exactly the contiguous solo
+    stream, while actually sharing pages."""
+
+    api, params = model
+    prefix = list(range(11, 29))           # 18 tokens: unaligned at ps=4
+    prompts = [prefix + [40 + i, 50 + i] for i in range(3)]
+    srv = Server(api, params, batch=4, context=48, paged=True, page_size=4,
+                 prefill_chunk=8, scheduler="prefix", share_prefix=True)
+    first = srv.submit(prompts[0], max_new=4)
+    while not first.out:
+        srv.tick()                         # source holds a written prefix
+    reqs = [first] + [srv.submit(p, max_new=4) for p in prompts[1:]]
+    srv.run_until_drained()
+    st = srv.stats()
+    assert st["share_hits"] == 2 and st["shared_tokens"] > 0
+    assert st["cow_copies"] == 2           # one partial-page copy each
+    for p, r in zip(prompts, reqs):
+        assert r.out == _solo_out(api, params, p, 4, prefill_chunk=8)
+        assert r.shared_prefix > 0 or r is first
+
+
+def test_shared_prefix_parity_with_speculation(model):
+    """Sharing composes with speculative decoding: paged + shared +
+    ngram drafter still reproduces the plain contiguous stream."""
+
+    api, params = model
+    prefix = list(range(3, 19))
+    prompts = [prefix + [20 + i] for i in range(2)]
+    srv = Server(api, params, batch=3, context=48, paged=True, page_size=4,
+                 prefill_chunk=8, share_prefix=True, speculate="ngram",
+                 spec_depth=3)
+    first = srv.submit(prompts[0], max_new=5)
+    while not first.out:
+        srv.tick()
+    second = srv.submit(prompts[1], max_new=5)
+    srv.run_until_drained()
+    assert srv.stats()["share_hits"] == 1
+    for p, r in zip(prompts, (first, second)):
+        assert r.out == _solo_out(api, params, p, 5, prefill_chunk=8)
+
+
+def test_share_prefix_requires_paged_attention(model):
+    api, params = model
+    with pytest.raises(ValueError, match="needs paged=True"):
+        Server(api, params, batch=2, context=48, share_prefix=True)
+
+
+def test_share_prefix_rejects_ssm_state():
+    cfg = get_config("hymba-1.5b").reduced().replace(
+        logits_dtype="float32")
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="pure-attention"):
+        Server(api, params, batch=2, context=48, paged=True, page_size=8,
+               share_prefix=True)
+
+
+def test_fcfs_aging_admits_starved_long_prompt_e2e(model):
+    """Anti-starvation end to end: a long prompt that never fits while
+    short requests stream past is eventually made a barrier and served;
+    every output stays solo-exact."""
+
+    api, params = model
+    # a 45-token prompt needs all 12 pool pages AT ADMISSION: it never
+    # fits while any short slot is live, so first-fit alone would
+    # starve it indefinitely
+    long_p = list(range(1, 46))
+    srv = Server(api, params, batch=2, context=48, paged=True, page_size=4,
+                 kv_pages=12, prefill_chunk=8,
+                 scheduler=make_scheduler("fcfs", age_limit=2))
+    # staggered lifetimes: slots free one at a time, so there is always
+    # a live short holding pages when the freed slot picks
+    shorts = [srv.submit([60, 61, 62], max_new=2),
+              srv.submit([63, 64, 65], max_new=5)]
+    big = srv.submit(long_p, max_new=3)
+    for i in range(2, 6):                  # keep short traffic arriving
+        srv.tick()
+        shorts.append(srv.submit([60 + i, 61 + i, 62 + i],
+                                 max_new=2 + i % 3))
+    srv.run_until_drained()
+    assert big.done and big.skips >= 2
+    assert big.out == _solo_out(api, params, long_p, 3, prefill_chunk=8)
+    for r in shorts:
+        assert r.out == _solo_out(api, params, r.prompt, r.max_new,
+                                  prefill_chunk=8)
+
+
+def test_policies_produce_identical_outputs_on_a_trace(model):
+    """Scheduling changes WHEN tokens are produced, never WHICH: the
+    same trace drains to byte-identical per-request outputs under every
+    policy (sharing included)."""
+
+    api, params = model
+    trace = generate_trace(TraceConfig(
+        requests=8, burst=3, burst_every=5, prompt_len=(4, 12),
+        max_new=(3, 5), shared_frac=0.5, prefix_len=8, vocab=250, seed=3))
+    outs = {}
+    for policy in SCHEDULER_KINDS:
+        srv = Server(api, params, batch=2, context=48, paged=True,
+                     page_size=4, kv_pages=16, prefill_chunk=8,
+                     scheduler=policy, share_prefix=(policy == "prefix"))
+        recs = drive_trace(srv, trace)
+        outs[policy] = {rid: tuple(rec["request"].out)
+                        for rid, rec in recs.items()}
+    assert outs["fcfs"] == outs["priority"] == outs["prefix"]
+
+
+# ---------------------------------------------------------------------------
+# workload generator
+# ---------------------------------------------------------------------------
+
+
+def test_generate_trace_is_deterministic_and_seed_sensitive():
+    cfg = TraceConfig(requests=16, shared_frac=0.5, seed=7)
+    a, b = generate_trace(cfg), generate_trace(cfg)
+    assert a == b
+    c = generate_trace(dataclasses.replace(cfg, seed=8))
+    assert a != c
+    for r in a:
+        assert 1 <= r.max_new and len(r.prompt) >= cfg.prompt_len[0]
+        assert r.deadline == r.arrival + cfg.deadlines[r.slo]
+
+
+def test_generate_trace_bursty_arrivals_and_shared_prefix():
+    cfg = TraceConfig(requests=9, arrival="bursty", burst=3, burst_every=5,
+                      shared_frac=1.0, prefix_len=6, seed=0)
+    trace = generate_trace(cfg)
+    assert [r.arrival for r in trace] == [0, 0, 0, 5, 5, 5, 10, 10, 10]
+    heads = {r.prompt[:6] for r in trace}
+    assert len(heads) == 1                 # every request opens identically
+    with pytest.raises(ValueError, match="unknown arrival"):
+        generate_trace(dataclasses.replace(cfg, arrival="weibull"))
+
+
+def test_summarize_scores_deadlines():
+    records = {
+        0: {"latency": 10, "slo": "interactive", "met": True, "tokens": 5},
+        1: {"latency": 50, "slo": "interactive", "met": False, "tokens": 7},
+        2: {"latency": 30, "slo": "batch", "met": True, "tokens": 4},
+    }
+    s = summarize(records, ticks=60)
+    assert s["requests"] == 3 and s["slo_attainment"] == pytest.approx(2 / 3)
+    assert s["goodput_tokens"] == 9        # only deadline-met tokens
+    assert s["p50_batch"] == 30.0
+    assert s["p99_all"] == pytest.approx(np.percentile([10, 50, 30], 99))
+
+
+# ---------------------------------------------------------------------------
+# SchedulerTunable
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_tunable_space_and_cost_rank():
+    tb = SchedulerTunable(requests=16, burst=8, shared_frac=0.5,
+                          kv_pages=24, page_size=8)
+    cfgs = list(tb.space())
+    assert len(cfgs) == len(tb.policies) * len(tb.age_limits)
+    costs = {c["policy"]: tb.cost(c) for c in cfgs if c["age_limit"] == 4}
+    assert all(np.isfinite(v) and v > 0 for v in costs.values())
+    # on a bursty interactive mix, the model must at least distinguish
+    # the policies (it ranks; measure() settles)
+    assert len(set(costs.values())) > 1
+
+
+def test_scheduler_tunable_fingerprint_excludes_model_handles():
+    tb = scheduler_tunable(None, arch="smollm-135m", requests=6)
+    fp = tb.fingerprint()
+    assert fp["tunable"] == "serve.scheduler"
+    assert fp["unit"] == "us_per_goodput_token"
+    assert "api" not in fp and "params" not in fp and "last_stats" not in fp
+    assert fp["prompt_len"] == [6, 20]     # JSON-stable lists
+    # identity is the trace + lattice, so JSON round-trips agree
+    tb2 = SchedulerTunable(**{k: v for k, v in fp.items()
+                              if k not in ("tunable", "unit")})
+    assert tb2.fingerprint() == fp
+
+
+def test_scheduler_plan_roundtrip_zero_engine_runs(tmp_path):
+    """Acceptance slice: ``serve.scheduler`` resolves from the plan
+    registry, measures real trace drains into the cache, and a second
+    pure-JSON pass is a pure cache hit (zero engine runs)."""
+
+    from repro.tune import TuningCache, TuningPlan, tune
+
+    cache = TuningCache(tmp_path / "c.json")
+    params = {"arch": "smollm-135m", "context": 48, "batch": 2,
+              "page_size": 8, "prefill_chunk": 8, "requests": 4,
+              "burst": 2, "burst_every": 4, "prompt_len": [4, 8],
+              "max_new": [2, 3], "prefix_len": 8, "age_limits": [4]}
+    tb = SchedulerTunable(**params)
+    res = tune(tb, engine="measure", cache=cache, top_k=1, repeats=1)
+    assert res.stats["provenance"] == "measured"
+    assert tb.last_stats is not None       # real drain happened
+    assert res.best_config["policy"] in SCHEDULER_KINDS
+
+    spec = {"name": "sched-warmup", "jobs": [
+        {"tunable": "serve.scheduler", "params": params,
+         "engine": "measure", "engine_kwargs": {"top_k": 1, "repeats": 1}}]}
+    report = TuningPlan.from_spec(spec).run(cache=cache)
+    assert report.ok and report.results[0].status == "hit"
+    assert report.results[0].best_config == dict(res.best_config)
+
+
+# ---------------------------------------------------------------------------
+# migration: pre-split import paths stay alive
+# ---------------------------------------------------------------------------
+
+
+def test_moved_tunables_reexported_from_serve():
+    from repro.runtime import serve, tunables
+    for name in ("DecodeBatchTunable", "PrefillChunkTunable",
+                 "KVPageTunable", "SchedulerTunable", "timed_server_drain",
+                 "kv_cache_stream_s", "decode_batch_tunable",
+                 "choose_batch"):
+        assert getattr(serve, name) is getattr(tunables, name)
+    # the move must not disturb cache identity: fingerprints of the
+    # re-exported classes carry the same tunable names as before
+    assert serve.DecodeBatchTunable(param_bytes=1 << 20, layers=2,
+                                    d_model=64, kv_width=32, context=32,
+                                    requests=2, mean_new=2
+                                    ).fingerprint()["tunable"] == \
+        "serve.decode_batch"
