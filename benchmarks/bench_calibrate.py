@@ -1,0 +1,118 @@
+"""Platform calibration end-to-end: probes -> fitted constants ->
+repriced cost models -> modeled-vs-measured trajectory.
+
+Three sections:
+
+1. **probes** — run the quick calibration ladders on this machine and
+   print fitted constants next to the TPU v5e defaults (on the CPU CI
+   box every fitted constant differs from the datasheet numbers by
+   orders of magnitude — exactly the gap the subsystem exists to close).
+2. **repricing** — evaluate one serving cost model
+   (``serve.spec_depth``) under the default constants and under the
+   fitted ones and show whether the modeled argmin MOVES: on hardware
+   much slower than a v5e the compute term dominates and deep
+   speculation stops paying, so the model's pick changes.
+3. **trajectory** — run the measure engine on ≥ 3 tunables under the
+   fitted spec and append the modeled-pick vs measured-pick gap per
+   tunable to ``BENCH_calibration.json`` (the append-over-runs artifact
+   CI uploads; a drifting gap flags a cost-model or kernel regression).
+"""
+
+from __future__ import annotations
+
+from repro.calibrate import (DEFAULT_SPEC, run_calibration,
+                             run_trajectory, set_platform_spec)
+from repro.kernels.matmul_tuned.ops import MatmulTunable
+from repro.kernels.tuned_reduction.ops import ReductionTunable
+from repro.runtime.speculate import SpecDepthTunable
+
+TRAJECTORY_TUNABLES = [
+    ("matmul_128", lambda: MatmulTunable(128, 128, 128)),
+    ("matmul_256", lambda: MatmulTunable(256, 256, 256)),
+    ("reduce_64k", lambda: ReductionTunable(64 * 1024)),
+]
+
+
+def _spec_depth_tunable() -> SpecDepthTunable:
+    # a 1B-param-class serving load: big enough that the weight-stream /
+    # FLOP balance is realistic, pure arithmetic (no model is built)
+    return SpecDepthTunable(param_bytes=2_000_000_000, layers=24,
+                            d_model=2048, kv_width=256, context=2048,
+                            prompt_len=128, requests=32, mean_new=128,
+                            batch=8, max_depth=8, drafters=("ngram",))
+
+
+def _argmin(tb) -> dict:
+    return min(tb.space(), key=tb.cost)
+
+
+def run(csv: list[str], *, quick: bool = True, repeats: int = 1,
+        top_k: int = 2, trajectory_path: str = "BENCH_calibration.json"
+        ) -> None:
+    print("\n== platform calibration: probes -> cost models -> "
+          "trajectory ==")
+
+    # 1) probe this machine (quick ladders)
+    fitted = run_calibration(quick=quick)
+    print(f"\ndevice {fitted.backend}/{fitted.device_kind} "
+          f"hash={fitted.calibration_hash()}")
+    print(f"  {'constant':<12} {'fitted':>12} {'v5e default':>12} "
+          f"{'ratio':>9}")
+    n_diff = 0
+    for name, value in fitted.constants().items():
+        dflt = getattr(DEFAULT_SPEC, name)
+        ratio = value / dflt if dflt else float("inf")
+        if value != dflt:
+            n_diff += 1
+        print(f"  {name:<12} {value:>12.4g} {dflt:>12.4g} {ratio:>9.3g}")
+    csv.append(f"calibrate_probes,0,fitted={n_diff};"
+               f"peak_flops={fitted.peak_flops:.4g};"
+               f"hbm_bw={fitted.hbm_bw:.4g};"
+               f"dispatch_us={fitted.dispatch_us:.2f}")
+
+    # 2) does the fitted spec change a cost model's ranking?
+    tb = _spec_depth_tunable()
+    prev = set_platform_spec(DEFAULT_SPEC)
+    try:
+        pick_default = _argmin(tb)
+        set_platform_spec(fitted)
+        pick_fitted = _argmin(tb)
+        moved = pick_default != pick_fitted
+
+        print(f"\nserve.spec_depth modeled argmin:")
+        print(f"  default constants  -> {pick_default}")
+        print(f"  fitted constants   -> {pick_fitted}"
+              f"  ({'MOVED' if moved else 'unchanged'})")
+        csv.append(f"calibrate_repricing,0,moved={moved};"
+                   f"default_depth={pick_default['depth']};"
+                   f"fitted_depth={pick_fitted['depth']}")
+
+        # 3) modeled-vs-measured gap per tunable, under the fitted spec
+        print(f"\ntrajectory ({len(TRAJECTORY_TUNABLES)} tunables, "
+              f"measure engine top_k={top_k} repeats={repeats}):")
+        run_doc = run_trajectory(
+            [(label, make()) for label, make in TRAJECTORY_TUNABLES],
+            path=trajectory_path, top_k=top_k, repeats=repeats)
+        for rec in run_doc["tunables"]:
+            print(f"  {rec['tunable']:<28} gap={rec['gap']:.3f} "
+                  f"({'agree' if rec['agree'] else 'disagree'}; "
+                  f"best {rec['best_measured_us']:.1f} us)")
+            csv.append(f"calibrate_gap_{rec['tunable']},"
+                       f"{rec['best_measured_us']:.1f},"
+                       f"gap={rec['gap']:.4f};"
+                       f"agree={'1' if rec['agree'] else '0'}")
+        print(f"appended run to {trajectory_path} "
+              f"(calibration={run_doc['calibration']})")
+    finally:
+        set_platform_spec(prev)
+
+
+def main() -> None:
+    csv: list[str] = []
+    run(csv, quick=False, repeats=3, top_k=4)
+    for line in csv:
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

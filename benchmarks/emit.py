@@ -1,0 +1,84 @@
+"""Shared ``BENCH_*.json`` artifact emitter.
+
+Every benchmark entry point prints the same ``name,us_per_call,derived``
+CSV; this module is the one place that turns it into the
+machine-readable artifact CI uploads (previously a private helper in
+``run.py`` hardwired to two filenames).  :func:`csv_to_doc` parses the
+rows, :func:`write_artifact` does the atomic write, :func:`emit` is the
+one-call form any bench can use for its own ``BENCH_<name>.json``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from pathlib import Path
+
+
+def csv_to_doc(csv: list[str], wall_s: float) -> dict:
+    """The machine-readable form of the harness CSV: one entry per
+    benchmark row, ``derived``'s ``k=v;k=v`` payload split out (numbers
+    parsed) so trend tooling can diff runs without string munging."""
+
+    entries = []
+    for line in csv:
+        parts = line.split(",", 2)
+        name = parts[0]
+        us = parts[1] if len(parts) > 1 else ""
+        derived = parts[2] if len(parts) > 2 else ""
+        entry: dict = {"name": name}
+        try:
+            entry["us_per_call"] = float(us)
+        except ValueError:
+            entry["us_per_call"] = us
+        parsed: dict = {}
+        for kv in derived.split(";"):
+            if "=" in kv:
+                k, v = kv.split("=", 1)
+                try:
+                    parsed[k] = float(v) if "." in v or "e" in v.lower() \
+                        else int(v)
+                except ValueError:
+                    parsed[k] = v
+            elif kv:
+                parsed.setdefault("notes", []).append(kv)
+        if parsed:
+            entry["derived"] = parsed
+        entries.append(entry)
+    return {"wall_s": round(wall_s, 3), "benchmarks": entries}
+
+
+def write_artifact(path: str | os.PathLike, doc: dict) -> Path:
+    """Atomically write ``doc`` as a ``BENCH_*.json`` artifact."""
+
+    p = Path(path)
+    if str(p.parent) not in ("", "."):
+        p.parent.mkdir(parents=True, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=str(p.parent) or ".",
+                               prefix=p.name, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(doc, f, indent=2)
+            f.write("\n")
+        os.replace(tmp, p)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+    return p
+
+
+def emit(csv: list[str], wall_s: float, path: str | os.PathLike) -> dict:
+    """Parse the CSV rows and write them as the artifact at ``path``;
+    returns the written doc."""
+
+    doc = csv_to_doc(csv, wall_s)
+    write_artifact(path, doc)
+    print(f"wrote {path}")
+    return doc
+
+
+__all__ = ["csv_to_doc", "write_artifact", "emit"]

@@ -15,46 +15,19 @@ artifact.
 ``--spec`` runs only the speculative-vs-one-token decode drain.
 ``--traffic`` runs only the trace-driven scheduling/prefix-sharing
 benchmark (and writes ``BENCH_traffic.json``).
+``--calibrate`` runs only the platform-calibration probes + trajectory
+(writes ``BENCH_calibrate.json`` and appends ``BENCH_calibration.json``).
+
+Artifact writing goes through :mod:`benchmarks.emit` (the shared
+``BENCH_*.json`` emitter).
 """
 
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
-
-def _csv_to_json(csv: list[str], wall_s: float) -> dict:
-    """The machine-readable form of the harness CSV: one entry per
-    benchmark row, ``derived``'s ``k=v;k=v`` payload split out (numbers
-    parsed) so trend tooling can diff runs without string munging."""
-
-    entries = []
-    for line in csv:
-        parts = line.split(",", 2)
-        name = parts[0]
-        us = parts[1] if len(parts) > 1 else ""
-        derived = parts[2] if len(parts) > 2 else ""
-        entry: dict = {"name": name}
-        try:
-            entry["us_per_call"] = float(us)
-        except ValueError:
-            entry["us_per_call"] = us
-        parsed: dict = {}
-        for kv in derived.split(";"):
-            if "=" in kv:
-                k, v = kv.split("=", 1)
-                try:
-                    parsed[k] = float(v) if "." in v or "e" in v.lower() \
-                        else int(v)
-                except ValueError:
-                    parsed[k] = v
-            elif kv:
-                parsed.setdefault("notes", []).append(kv)
-        if parsed:
-            entry["derived"] = parsed
-        entries.append(entry)
-    return {"wall_s": round(wall_s, 3), "benchmarks": entries}
+from benchmarks.emit import emit
 
 
 def main(argv=None) -> None:
@@ -72,21 +45,27 @@ def main(argv=None) -> None:
     ap.add_argument("--traffic", action="store_true",
                     help="trace-driven scheduling + prefix-sharing "
                          "benchmark only")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="platform-calibration probes + modeled-vs-"
+                         "measured trajectory only")
     ap.add_argument("--json-out", default=None,
                     help="write the CSV as machine-readable JSON here "
                          "(default BENCH_smoke.json with --smoke, "
-                         "BENCH_traffic.json with --traffic)")
+                         "BENCH_traffic.json with --traffic, "
+                         "BENCH_calibrate.json with --calibrate)")
     args = ap.parse_args(argv)
 
-    from benchmarks import (bench_measure, bench_paged, bench_prefill,
-                            bench_roofline, bench_spec, bench_sweep,
-                            bench_table1, bench_table2, bench_table3,
-                            bench_tpu_tuning, bench_traffic)
+    from benchmarks import (bench_calibrate, bench_measure, bench_paged,
+                            bench_prefill, bench_roofline, bench_spec,
+                            bench_sweep, bench_table1, bench_table2,
+                            bench_table3, bench_tpu_tuning, bench_traffic)
 
     csv: list[str] = []
     t0 = time.perf_counter()
     if args.measure:
         bench_measure.run(csv)
+    elif args.calibrate:
+        bench_calibrate.run(csv)
     elif args.prefill:
         bench_prefill.run(csv, **bench_prefill.SMOKE)
     elif args.paged:
@@ -127,12 +106,10 @@ def main(argv=None) -> None:
 
     json_out = args.json_out or ("BENCH_smoke.json" if args.smoke
                                  else "BENCH_traffic.json" if args.traffic
-                                 else None)
+                                 else "BENCH_calibrate.json"
+                                 if args.calibrate else None)
     if json_out:
-        with open(json_out, "w") as f:
-            json.dump(_csv_to_json(csv, dt), f, indent=2)
-            f.write("\n")
-        print(f"wrote {json_out}")
+        emit(csv, dt, json_out)
 
 
 if __name__ == "__main__":

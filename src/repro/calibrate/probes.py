@@ -1,0 +1,260 @@
+"""ERT-style microbenchmark probes that fit a :class:`PlatformSpec`.
+
+Four probes, each a *sweep* (raw ``{size -> wall-clock}`` samples) and a
+pure *fit* (sweep -> one constant), deliberately separated so fits are
+deterministic and unit-testable on synthetic data:
+
+* **matmul ladder** -> ``peak_flops``: square jitted matmuls of rising
+  size; the best achieved FLOP/s across the ladder is the empirical
+  compute roof (big tiles saturate the MXU / FMA pipes, small ones show
+  dispatch — taking the max is the standard ERT reading).
+* **streaming triad footprint sweep** -> ``hbm_bw``: ``z = x + 1.5 y``
+  over rising working sets; the fit reads the bandwidth at the LARGEST
+  footprint, i.e. past the cache hierarchy — the roofline's memory roof
+  is main-memory bandwidth, not L2.
+* **tiny-kernel dispatch probe** -> ``dispatch_us``: a jitted scalar
+  add timed one dispatch at a time; the median sample is the per-call
+  launch overhead every serving cost model charges as ``dispatch_s``.
+* **collective ping** (optional) -> ``link_bw``: a psum across devices;
+  skipped (constant stays at the default) on single-device hosts.
+
+All timing goes through :func:`repro.kernels.common.time_fn` — the one
+warmup + ``block_until_ready`` + median discipline every ``measure()``
+in the repo uses.
+
+:func:`run_calibration` runs the probes and returns a calibrated
+:class:`PlatformSpec`; :func:`ensure_calibrated` is the load-or-probe
+front door (a valid on-disk artifact for this device short-circuits the
+probes entirely — the property the CI calibrate-smoke step asserts).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Mapping, Sequence
+
+from .spec import (DEFAULT_SPEC, CalibrationError, PlatformSpec,
+                   calibrated_replace, device_fingerprint, load_spec,
+                   set_platform_spec, spec_path)
+
+# ladder/footprint defaults: big enough to saturate a CPU's FMA pipes /
+# fall out of L2, small enough that the whole calibration stays seconds
+MATMUL_SIZES = (128, 256, 384, 512)
+TRIAD_FOOTPRINTS = (1 << 20, 4 << 20, 16 << 20, 64 << 20)   # bytes
+QUICK_MATMUL_SIZES = (64, 128)
+QUICK_TRIAD_FOOTPRINTS = (1 << 18, 1 << 20)
+
+
+def _probe_dtype():
+    import jax
+    return "bfloat16" if jax.default_backend() == "tpu" else "float32"
+
+
+# -- sweeps (hardware in the loop) ------------------------------------------
+
+
+def matmul_flops_sweep(sizes: Sequence[int] = MATMUL_SIZES, *,
+                       warmup: int = 1, iters: int = 3
+                       ) -> list[dict[str, float]]:
+    """Time an ``n x n @ n x n`` jitted matmul per ladder rung; each
+    entry carries the rung, its FLOP count (2n^3) and the median us."""
+
+    import jax
+    import jax.numpy as jnp
+    from ..kernels.common import time_fn
+    dtype = _probe_dtype()
+    f = jax.jit(lambda a, b: a @ b)
+    out = []
+    for n in sizes:
+        a = jnp.ones((n, n), dtype)
+        b = jnp.ones((n, n), dtype)
+        us = time_fn(lambda: f(a, b), warmup=warmup, iters=iters)
+        out.append({"n": n, "flops": float(2 * n ** 3), "us": us})
+    return out
+
+
+def memory_bw_sweep(footprints: Sequence[int] = TRIAD_FOOTPRINTS, *,
+                    warmup: int = 1, iters: int = 3
+                    ) -> list[dict[str, float]]:
+    """Time a jitted streaming triad ``z = x + 1.5 y`` per working-set
+    size; each entry carries the footprint, the bytes moved (read x,
+    read y, write z) and the median us."""
+
+    import jax
+    import jax.numpy as jnp
+    from ..kernels.common import time_fn
+    f = jax.jit(lambda x, y: x + 1.5 * y)
+    out = []
+    for fp in footprints:
+        n = max(1, int(fp) // (3 * 4))      # 3 f32 arrays in the set
+        x = jnp.ones((n,), "float32")
+        y = jnp.ones((n,), "float32")
+        us = time_fn(lambda: f(x, y), warmup=warmup, iters=iters)
+        out.append({"footprint": float(fp), "bytes": float(3 * n * 4),
+                    "us": us})
+    return out
+
+
+def dispatch_latency_sweep(reps: int = 16, *, warmup: int = 4
+                           ) -> list[float]:
+    """Per-dispatch wall-clock us of a tiny jitted kernel (a scalar
+    add): each sample is ONE timed dispatch, so the sweep captures the
+    launch-latency distribution rather than a throughput average."""
+
+    import jax
+    import jax.numpy as jnp
+    from ..kernels.common import time_fn
+    f = jax.jit(lambda x: x + 1.0)
+    x = jnp.zeros(())
+    for _ in range(max(0, warmup)):
+        jax.block_until_ready(f(x))
+    return [time_fn(lambda: f(x), warmup=0, iters=1)
+            for _ in range(max(1, reps))]
+
+
+def collective_bw_sweep(sizes: Sequence[int] = (1 << 20,), *,
+                        warmup: int = 1, iters: int = 3
+                        ) -> list[dict[str, float]]:
+    """Time an all-reduce (psum) across local devices; empty on
+    single-device hosts — the fit then leaves ``link_bw`` at the
+    default and omits it from the spec's ``fitted`` list."""
+
+    import jax
+    n_dev = len(jax.devices())
+    if n_dev < 2:
+        return []
+    import jax.numpy as jnp
+    from ..kernels.common import time_fn
+    f = jax.pmap(lambda x: jax.lax.psum(x, "i"), axis_name="i")
+    out = []
+    for size in sizes:
+        n = max(1, int(size) // 4)
+        x = jnp.ones((n_dev, n), "float32")
+        us = time_fn(lambda: f(x), warmup=warmup, iters=iters)
+        # ring all-reduce moves 2*(n-1)/n of the payload per device
+        bytes_per_dev = 2 * (n_dev - 1) / n_dev * n * 4
+        out.append({"size": float(size), "devices": n_dev,
+                    "bytes_per_device": bytes_per_dev, "us": us})
+    return out
+
+
+# -- fits (pure, deterministic) ---------------------------------------------
+
+
+def fit_peak_flops(sweep: Sequence[Mapping[str, float]]) -> float:
+    """Best achieved FLOP/s across the matmul ladder (the ERT reading
+    of the compute roof)."""
+
+    if not sweep:
+        raise CalibrationError("empty matmul sweep")
+    return max(p["flops"] / (p["us"] * 1e-6) for p in sweep)
+
+
+def fit_bandwidth(sweep: Sequence[Mapping[str, float]]) -> float:
+    """Bytes/s at the LARGEST footprint — the main-memory roof, past
+    the cache hierarchy (small footprints report cache bandwidth)."""
+
+    if not sweep:
+        raise CalibrationError("empty memory sweep")
+    biggest = max(sweep, key=lambda p: p["bytes"])
+    return biggest["bytes"] / (biggest["us"] * 1e-6)
+
+
+def fit_dispatch_us(samples: Sequence[float]) -> float:
+    """Median per-dispatch latency in us."""
+
+    if not samples:
+        raise CalibrationError("empty dispatch sweep")
+    from ..kernels.common import median
+    return median(samples)
+
+
+def fit_link_bw(sweep: Sequence[Mapping[str, float]]) -> float | None:
+    """Per-link bytes/s from the collective sweep (aggregate achieved
+    bandwidth split over the default link count); ``None`` when the
+    probe could not run (single device)."""
+
+    if not sweep:
+        return None
+    best = max(p["bytes_per_device"] / (p["us"] * 1e-6) for p in sweep)
+    return best / DEFAULT_SPEC.links
+
+
+# -- calibration front door --------------------------------------------------
+
+
+def run_calibration(*, matmul_sizes: Sequence[int] | None = None,
+                    footprints: Sequence[int] | None = None,
+                    dispatch_reps: int = 16, warmup: int = 1,
+                    iters: int = 3, quick: bool = False) -> PlatformSpec:
+    """Run every probe and fit a calibrated :class:`PlatformSpec` for
+    the running device.  ``quick=True`` shrinks the ladders to the CI /
+    test sizes (same probes, smaller working sets)."""
+
+    if matmul_sizes is None:
+        matmul_sizes = QUICK_MATMUL_SIZES if quick else MATMUL_SIZES
+    if footprints is None:
+        footprints = QUICK_TRIAD_FOOTPRINTS if quick else TRIAD_FOOTPRINTS
+
+    mm = matmul_flops_sweep(matmul_sizes, warmup=warmup, iters=iters)
+    tr = memory_bw_sweep(footprints, warmup=warmup, iters=iters)
+    dp = dispatch_latency_sweep(dispatch_reps)
+    co = collective_bw_sweep(warmup=warmup, iters=iters)
+
+    fitted: dict[str, float] = {
+        "peak_flops": fit_peak_flops(mm),
+        "hbm_bw": fit_bandwidth(tr),
+        "dispatch_us": fit_dispatch_us(dp),
+    }
+    link = fit_link_bw(co)
+    if link is not None:
+        fitted["link_bw"] = link
+
+    dev = device_fingerprint()
+    return calibrated_replace(
+        DEFAULT_SPEC, backend=dev["backend"],
+        device_kind=dev["device_kind"],
+        probes={"matmul": mm, "triad": tr, "dispatch": dp,
+                "collective": co, "fitted": sorted(fitted),
+                "quick": bool(quick)},
+        **fitted)
+
+
+def ensure_calibrated(path=None, *, force: bool = False,
+                      install: bool = True, save: bool = True,
+                      quick: bool = False,
+                      **probe_kw: Any) -> tuple[PlatformSpec, bool]:
+    """Load-or-probe: return ``(spec, probed)`` where ``probed`` says
+    whether the probes actually ran.
+
+    A schema-current artifact at ``path`` (default: :func:`spec_path`)
+    calibrated on THIS device is a pure load — zero probes, the
+    property the CI smoke asserts.  Otherwise (missing, stale schema,
+    foreign device, or ``force=True``) the probes run and the fitted
+    spec is written back.  ``install=True`` makes the result the
+    process-wide active spec (:func:`set_platform_spec`)."""
+
+    path = spec_path(path)
+    if not force:
+        try:
+            spec = load_spec(path)
+            if spec.matches_device():
+                if install:
+                    set_platform_spec(spec)
+                return spec, False
+        except (OSError, CalibrationError):
+            pass
+    spec = run_calibration(quick=quick, **probe_kw)
+    if save:
+        spec.save(path)
+    if install:
+        set_platform_spec(spec)
+    return spec, True
+
+
+__all__ = ["MATMUL_SIZES", "TRIAD_FOOTPRINTS", "QUICK_MATMUL_SIZES",
+           "QUICK_TRIAD_FOOTPRINTS", "matmul_flops_sweep",
+           "memory_bw_sweep", "dispatch_latency_sweep",
+           "collective_bw_sweep", "fit_peak_flops", "fit_bandwidth",
+           "fit_dispatch_us", "fit_link_bw", "run_calibration",
+           "ensure_calibrated"]

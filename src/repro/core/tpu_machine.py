@@ -27,12 +27,17 @@ import math
 from dataclasses import asdict, dataclass
 from typing import Any, ClassVar, Mapping
 
+from ..calibrate.spec import DEFAULT_SPEC, get_platform_spec
 from .search_space import Param, SearchSpace
 
-PEAK_FLOPS = 197e12
-HBM_BW = 819e9
-ICI_BW = 4 * 50e9
-DCI_BW = 25e9
+# Datasheet aliases (TPU v5e), stated once in calibrate.spec.DEFAULT_SPEC.
+# The models below resolve LIVE constants via get_platform_spec() so a
+# calibration artifact (python -m repro.calibrate run) reprices them;
+# these names remain for callers that want the uncalibrated numbers.
+PEAK_FLOPS = DEFAULT_SPEC.peak_flops
+HBM_BW = DEFAULT_SPEC.hbm_bw
+ICI_BW = DEFAULT_SPEC.ici_bw
+DCI_BW = DEFAULT_SPEC.dci_bw
 
 
 @dataclass(frozen=True)
@@ -82,20 +87,24 @@ class TPUConfig:
     fsdp: bool = False               # shard params over dp (ZeRO-3-ish)
 
 
-def step_time(w: TPUWorkload, c: TPUConfig, *, overlap: float = 0.7
-              ) -> dict[str, float]:
+def step_time(w: TPUWorkload, c: TPUConfig, *, overlap: float = 0.7,
+              spec=None) -> dict[str, float]:
     """Modeled per-step time decomposition (seconds).
 
     overlap: fraction of collective time hidden under compute (TPU async
-    collectives + microbatch pipelining)."""
+    collectives + microbatch pipelining).  ``spec`` pins the platform
+    constants (a :class:`repro.calibrate.PlatformSpec`); ``None``
+    resolves the active one (calibrated when an artifact exists)."""
 
+    if spec is None:
+        spec = get_platform_spec()
     chips = c.dp * c.tp * c.pods
     tokens = w.seq * w.global_batch
 
     # -- compute ------------------------------------------------------------
     remat_mult = {"none": 1.0, "dots": 1.15, "full": 4.0 / 3.0}[c.remat]
     flops = w.flops_const * w.active_params * tokens * remat_mult
-    compute = flops / (chips * PEAK_FLOPS)
+    compute = flops / (chips * spec.peak_flops)
 
     # -- memory -------------------------------------------------------------
     # weights re-streamed once per microbatch (fwd) + once (bwd);
@@ -104,22 +113,23 @@ def step_time(w: TPUWorkload, c: TPUConfig, *, overlap: float = 0.7
     act_bytes = tokens // (c.dp * c.pods) * w.d_model * w.dtype_bytes \
         * w.layers * (4 if c.remat == "none" else 2)
     opt_bytes = w.params * 12 / (c.tp * (c.dp if c.fsdp else 1))
-    hbm = (w_bytes * (c.microbatches + 1) + act_bytes + opt_bytes) / HBM_BW
+    hbm = (w_bytes * (c.microbatches + 1) + act_bytes + opt_bytes) \
+        / spec.hbm_bw
 
     # -- collectives ----------------------------------------------------------
     # DP gradient all-reduce (ring): 2*(n-1)/n * bytes; FSDP swaps it for
     # reduce-scatter + all-gather (same volume, half latency exposure).
     grad_bytes = w.params * w.dtype_bytes / c.tp
     dp_ways = c.dp
-    dp_ar = 2 * (dp_ways - 1) / max(dp_ways, 1) * grad_bytes / ICI_BW
+    dp_ar = 2 * (dp_ways - 1) / max(dp_ways, 1) * grad_bytes / spec.ici_bw
     # TP per-layer activation collectives (2 all-reduces/layer fwd+bwd)
     tp_bytes = (tokens // (c.dp * c.pods)) * w.d_model * w.dtype_bytes
     tp_ar = (4 * (c.tp - 1) / max(c.tp, 1) * tp_bytes * w.layers /
-             max(c.microbatches, 1) * c.microbatches) / ICI_BW \
+             max(c.microbatches, 1) * c.microbatches) / spec.ici_bw \
         if c.tp > 1 else 0.0
     # pod-axis gradient reduction over DCI (compressible)
     pod_bytes = grad_bytes * (0.25 if c.compress_pod_grads else 1.0)
-    pod_ar = 2 * (c.pods - 1) / max(c.pods, 1) * pod_bytes / DCI_BW \
+    pod_ar = 2 * (c.pods - 1) / max(c.pods, 1) * pod_bytes / spec.dci_bw \
         if c.pods > 1 else 0.0
 
     collective = dp_ar + tp_ar + pod_ar

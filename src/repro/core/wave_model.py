@@ -55,6 +55,31 @@ class WaveParams:
         n_warps = max(1, -(-resident // self.warp))
         return max(1, -(-self.GMT // n_warps))
 
+    @classmethod
+    def from_platform(cls, size: int, *, spec=None, el_bytes: int = 4,
+                      **kw) -> "WaveParams":
+        """Wave parameters whose GMT ratio is derived from a MEASURED
+        platform (:func:`gmt_from_spec`) instead of the default 4 —
+        the bridge from :class:`repro.calibrate.PlatformSpec` (physical
+        constants) to the abstract process model's memory ratio."""
+
+        return cls(size=size, GMT=gmt_from_spec(spec, el_bytes=el_bytes),
+                   **kw)
+
+
+def gmt_from_spec(spec=None, *, el_bytes: int = 4) -> int:
+    """The abstract GMT ratio (global-memory time per unit compute)
+    implied by a measured platform: how many element-sized FLOPs the
+    device completes in the time one element streams from main memory —
+    ``peak_flops * el_bytes / hbm_bw``, floored at 1.  ``spec=None``
+    resolves the active :func:`repro.calibrate.get_platform_spec`, so a
+    calibration artifact reshapes the abstract platform too."""
+
+    if spec is None:
+        from ..calibrate.spec import get_platform_spec
+        spec = get_platform_spec()
+    return max(1, round(spec.peak_flops * el_bytes / spec.hbm_bw))
+
 
 def _group_structure(size: int, WG: int, TS: int):
     items = size // TS
@@ -172,4 +197,4 @@ def model_time_jnp(p: WaveParams, WG, TS):
     return jnp.where(items >= 1, t, jnp.iinfo(idt).max)
 
 
-__all__ = ["WaveParams", "model_time", "model_time_jnp"]
+__all__ = ["WaveParams", "model_time", "model_time_jnp", "gmt_from_spec"]

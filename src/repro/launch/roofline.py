@@ -30,12 +30,17 @@ import json
 from dataclasses import dataclass
 from typing import Any
 
+from ..calibrate.spec import DEFAULT_SPEC, get_platform_spec
 from ..configs import SHAPES, get_config
 
-PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
-HBM_BW = 819e9               # bytes/s per chip
-LINK_BW = 50e9               # bytes/s per ICI link
-LINKS = 4                    # usable links per chip (2-D torus)
+# Datasheet aliases — the single definition lives in
+# calibrate.spec.DEFAULT_SPEC (previously re-declared here verbatim).
+# analyze() resolves LIVE constants via get_platform_spec() so a
+# calibration artifact reprices the roofline terms.
+PEAK_FLOPS = DEFAULT_SPEC.peak_flops   # bf16 FLOP/s per chip
+HBM_BW = DEFAULT_SPEC.hbm_bw           # bytes/s per chip
+LINK_BW = DEFAULT_SPEC.link_bw         # bytes/s per ICI link
+LINKS = DEFAULT_SPEC.links             # usable links per chip (2-D torus)
 
 
 def active_params(arch: str) -> int:
@@ -109,12 +114,14 @@ class Roofline:
                 f"{self.useful_ratio:.2f} | {self.mfu*100:.1f}% |")
 
 
-def analyze(rec: dict) -> Roofline:
+def analyze(rec: dict, *, spec=None) -> Roofline:
     r = Roofline(arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
                  status=rec["status"])
     if rec["status"] != "ok":
         r.note = rec.get("reason", "")
         return r
+    if spec is None:
+        spec = get_platform_spec()
 
     comp = []
     blk = rec.get("block")
@@ -131,9 +138,9 @@ def analyze(rec: dict) -> Roofline:
     # HLO shapes inside an SPMD module are per-device shards already.
     r.coll_bytes_per_dev = coll_total
 
-    r.compute_s = r.hlo_flops_per_dev / PEAK_FLOPS
-    r.memory_s = r.hbm_bytes_per_dev / HBM_BW
-    r.collective_s = r.coll_bytes_per_dev / (LINKS * LINK_BW)
+    r.compute_s = r.hlo_flops_per_dev / spec.peak_flops
+    r.memory_s = r.hbm_bytes_per_dev / spec.hbm_bw
+    r.collective_s = r.coll_bytes_per_dev / spec.ici_bw
     terms = {"compute": r.compute_s, "memory": r.memory_s,
              "collective": r.collective_s}
     r.dominant = max(terms, key=terms.get)
@@ -143,7 +150,7 @@ def analyze(rec: dict) -> Roofline:
     total_hlo = r.hlo_flops_per_dev * n_dev
     r.useful_ratio = r.model_flops / total_hlo if total_hlo else 0.0
     if r.step_time_s > 0:
-        r.mfu = r.model_flops / (n_dev * PEAK_FLOPS * r.step_time_s)
+        r.mfu = r.model_flops / (n_dev * spec.peak_flops * r.step_time_s)
     r.peak_hbm_gib = rec.get("memory", {}).get("peak_hbm_bytes", 0) / 2**30
     return r
 

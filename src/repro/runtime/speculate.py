@@ -40,8 +40,8 @@ from typing import Any, ClassVar, Mapping, Protocol, Sequence, runtime_checkable
 
 import numpy as np
 
+from ..calibrate.spec import get_platform_spec
 from ..core.search_space import Param, SearchSpace
-from ..core.tpu_machine import HBM_BW, PEAK_FLOPS
 
 DRAFTER_KINDS = ("ngram", "draft")
 
@@ -240,19 +240,23 @@ class SpecDepthTunable:
 
         d = int(cfg["depth"])
         drafter = str(cfg["drafter"])
+        platform = get_platform_spec()
         n_params = self.param_bytes / 2            # bf16 weights
-        weight_s = self.param_bytes / HBM_BW
+        weight_s = self.param_bytes / platform.hbm_bw
         from .tunables import kv_cache_stream_s
         kv_s = kv_cache_stream_s(self.batch, self.layers, self.context,
                                  self.kv_width)
-        flops_s = 2 * n_params * (d + 1) * self.batch / PEAK_FLOPS
+        flops_s = (2 * n_params * (d + 1) * self.batch
+                   / platform.peak_flops)
         spec_tick_s = 2 * (weight_s + flops_s) + kv_s + self.dispatch_s
         if drafter == "draft":
             draft_fwd_s = self.draft_cost_ratio * (
-                weight_s + 2 * n_params * self.batch / PEAK_FLOPS)
+                weight_s
+                + 2 * n_params * self.batch / platform.peak_flops)
             spec_tick_s += d * draft_fwd_s
         prefill_tick_s = (weight_s + kv_s + self.dispatch_s
-                          + 2 * n_params * self.batch / PEAK_FLOPS)
+                          + 2 * n_params * self.batch
+                          / platform.peak_flops)
         decode_ticks = self.mean_new / self.tokens_per_tick(cfg)
         prefill_ticks = -(-self.prompt_len // 32)
         waves = -(-self.requests // self.batch)

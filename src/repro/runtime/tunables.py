@@ -25,11 +25,18 @@ import dataclasses
 from dataclasses import dataclass, field
 from typing import Any, ClassVar, Mapping
 
+from ..calibrate.spec import get_platform_spec
 from ..core.search_space import Param, SearchSpace
-from ..core.tpu_machine import HBM_BW, PEAK_FLOPS
 
 KV_CACHE_BYTES = 2          # bf16 cache entries
 K_AND_V = 2                 # two tensors per layer
+
+# Every cost() below prices bytes and FLOPs against the ACTIVE platform
+# spec (repro.calibrate) — the TPU v5e defaults until a calibration
+# artifact exists, the fitted constants after `python -m repro.calibrate
+# run`.  The per-tunable dispatch_s fields stay explicit knobs (and part
+# of the cache fingerprint); the calibrated dispatch latency is
+# available as get_platform_spec().dispatch_s for callers sizing them.
 
 
 def timed_server_drain(api, params, *, batch: int, context: int,
@@ -126,7 +133,7 @@ def kv_cache_stream_s(batch: int, layers: int, cache_len: int,
     :class:`PrefillChunkTunable`."""
 
     return (batch * layers * cache_len * kv_width
-            * K_AND_V * KV_CACHE_BYTES / HBM_BW)
+            * K_AND_V * KV_CACHE_BYTES / get_platform_spec().hbm_bw)
 
 
 @dataclass(frozen=True)
@@ -174,7 +181,7 @@ class DecodeBatchTunable:
         as ``measure`` so modeled/measured entries are comparable)."""
 
         b = cfg["batch"]
-        weight_s = self.param_bytes / HBM_BW
+        weight_s = self.param_bytes / get_platform_spec().hbm_bw
         kv_s = kv_cache_stream_s(b, self.layers, self.context,
                                  self.kv_width or self.d_model)
         tick_s = weight_s + kv_s + self.dispatch_s
@@ -285,17 +292,18 @@ class PrefillChunkTunable:
         decode ticks follow the decode-batch model."""
 
         chunk = cfg["chunk"]
+        spec = get_platform_spec()
         n_params = self.param_bytes / 2            # bf16 weights
-        weight_s = self.param_bytes / HBM_BW
+        weight_s = self.param_bytes / spec.hbm_bw
         kv_s = kv_cache_stream_s(self.batch, self.layers, self.context,
                                  self.kv_width)
-        flops_s = 2 * n_params * chunk * self.batch / PEAK_FLOPS
+        flops_s = 2 * n_params * chunk * self.batch / spec.peak_flops
         score_s = (self.batch * self.layers * chunk
-                   * (self.context + chunk) * 4 / HBM_BW)
+                   * (self.context + chunk) * 4 / spec.hbm_bw)
         prefill_tick_s = (weight_s + kv_s + flops_s + score_s
                           + self.dispatch_s)
         decode_tick_s = (weight_s + kv_s
-                         + 2 * n_params * self.batch / PEAK_FLOPS
+                         + 2 * n_params * self.batch / spec.peak_flops
                          + self.dispatch_s)
         prefill_ticks = -(-self.prompt_len // chunk)
         waves = -(-self.requests // self.batch)
@@ -441,7 +449,7 @@ class KVPageTunable:
         waves = -(-self.requests // conc)
         mean_prompt = mean_total - self.mean_new
         ticks = -(-int(mean_prompt) // self.prefill_chunk) + self.mean_new
-        weight_s = self.param_bytes / HBM_BW
+        weight_s = self.param_bytes / get_platform_spec().hbm_bw
         kv_s = kv_cache_stream_s(conc, self.layers, int(mean_total),
                                  self.kv_width)
         gather_s = conc * -(-int(mean_total) // page) * self.page_gather_s
@@ -650,7 +658,7 @@ SCHEDULER_KINDS`: fcfs / prefix / priority — prefix also enables
                + (1 - self.interactive_frac) * met_bat)
 
         ticks = -(-self.requests // conc) * service
-        weight_s = param_bytes / HBM_BW
+        weight_s = param_bytes / get_platform_spec().hbm_bw
         kv_s = kv_cache_stream_s(conc, layers,
                                  int(mean_prompt + mean_new), kv_width)
         tick_us = (weight_s + kv_s + 50e-6) * 1e6

@@ -43,15 +43,26 @@ _DEFAULT_PATH = "~/.cache/repro/tune_cache.json"
 
 
 def platform_fingerprint() -> dict[str, str]:
-    """Backend + chip generation the tuned config is valid for."""
+    """Backend + chip generation + calibration id the tuned config is
+    valid for.  ``calibration`` is the active
+    :func:`repro.calibrate.calibration_hash` — the literal ``"default"``
+    under the datasheet constants, a short digest of the fitted ones
+    under a calibration artifact — so configs tuned against calibrated
+    cost models never collide with default-constant entries."""
 
     try:
         import jax
         dev = jax.devices()[0]
-        return {"backend": jax.default_backend(),
-                "device_kind": str(getattr(dev, "device_kind", "unknown"))}
+        fp = {"backend": jax.default_backend(),
+              "device_kind": str(getattr(dev, "device_kind", "unknown"))}
     except Exception:                                  # pragma: no cover
-        return {"backend": "unknown", "device_kind": "unknown"}
+        fp = {"backend": "unknown", "device_kind": "unknown"}
+    try:
+        from ..calibrate.spec import calibration_hash
+        fp["calibration"] = calibration_hash()
+    except Exception:                                  # pragma: no cover
+        fp["calibration"] = "default"
+    return fp
 
 
 def tunable_fingerprint(tunable) -> dict[str, Any]:

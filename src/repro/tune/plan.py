@@ -16,6 +16,7 @@ the independent jobs, progress lines and a summary
 Spec format (JSON or dict)::
 
     {"name": "fleet-warmup",
+     "calibrate": true,          # resolve a platform calibration first
      "jobs": [
        {"tunable": "kernels.matmul_tuned",
         "params": {"M": 1024, "N": 1024, "K": 1024, "dtype_bytes": 2},
@@ -292,9 +293,13 @@ class TuningPlan:
     """A declarative batch of tuning jobs; see the module docstring."""
 
     def __init__(self, jobs: Sequence[TuningJob] | None = None, *,
-                 name: str = "plan"):
+                 name: str = "plan", require_calibration: bool = False):
         self.name = name
         self.jobs: list[TuningJob] = list(jobs or [])
+        # True: run() resolves a platform calibration (load-or-probe via
+        # repro.calibrate.ensure_calibrated) BEFORE any job, so measured
+        # jobs tune — and cache-fingerprint — against measured constants
+        self.require_calibration = require_calibration
 
     def add(self, tunable_or_factory, engine: str = "auto", *,
             label: str = "", force: bool = False,
@@ -331,7 +336,8 @@ class TuningPlan:
             spec = json.loads(text)
         if not isinstance(spec, Mapping):
             raise ValueError("plan spec must be a mapping with a 'jobs' list")
-        plan = cls(name=str(spec.get("name", "plan")))
+        plan = cls(name=str(spec.get("name", "plan")),
+                   require_calibration=bool(spec.get("calibrate", False)))
         for i, jspec in enumerate(spec.get("jobs", [])):
             for params, suffix in _expand_grid(jspec):
                 name = jspec.get("tunable")
@@ -381,6 +387,15 @@ class TuningPlan:
         store = default_cache() if cache == "default" else cache
         report = PlanReport(plan=self.name)
         say = progress or (lambda line: None)
+
+        if self.require_calibration:
+            # before ANY job (including key resolution): cost models and
+            # cache fingerprints must see the calibrated constants
+            from ..calibrate import ensure_calibrated
+            spec, probed = ensure_calibrated(quick=True)
+            say(f"[calibrate] {'probed' if probed else 'loaded'} "
+                f"{spec.backend}/{spec.device_kind} "
+                f"hash={spec.calibration_hash()}")
 
         def run_one(i: int, job: TuningJob) -> JobResult:
             t0 = time.perf_counter()

@@ -1,6 +1,9 @@
 """Shared test setup: point the process-wide tuning cache at a temp dir
 so ``@autotune``-decorated kernels never read/write the developer's
-``~/.cache/repro`` store during the suite."""
+``~/.cache/repro`` store during the suite, and pin the platform spec to
+the defaults so a developer's calibration artifact never reprices the
+cost models mid-suite (tests that exercise calibration install their
+own spec and restore)."""
 
 import pytest
 
@@ -12,3 +15,11 @@ def _isolated_tuning_cache(tmp_path_factory):
     prev = set_default_cache(TuningCache(path))
     yield
     set_default_cache(prev)
+
+
+@pytest.fixture(autouse=True, scope="session")
+def _pinned_platform_spec():
+    from repro.calibrate import DEFAULT_SPEC, set_platform_spec
+    prev = set_platform_spec(DEFAULT_SPEC)
+    yield
+    set_platform_spec(prev)
