@@ -51,6 +51,18 @@ class ExploreResult:
     terminals: list[Terminal] = field(default_factory=list)
     truncated: bool = False               # hit a bound
     elapsed_s: float = 0.0
+    frontier_peak: int = 0                # max DFS stack depth observed
+    bound_reason: str | None = None       # "max_states" | "depth_limit"
+
+    @property
+    def status(self) -> str:
+        """Three-way verdict: a truncated run that found no violation is
+        ``"bounded"`` — the bound was exhausted, which is NOT a proof —
+        while an exhaustive clean run is ``"verified"``."""
+
+        if not self.property_holds:
+            return "violated"
+        return "bounded" if self.truncated else "verified"
 
 
 def explore(
@@ -65,6 +77,7 @@ def explore(
     collect_terminals: bool = False,
     keep_trails: bool = True,
     branch_and_bound: str | None = None,
+    on_violation: Callable[[Terminal], None] | None = None,
 ) -> ExploreResult:
     """DFS for a reachable state with ``violates(globals)``.
 
@@ -78,6 +91,13 @@ def explore(
     any state whose time already reaches the best terminal time found
     cannot lead to a better one and is pruned — the minimal time drops
     out of ONE verification run instead of a bisection of runs.
+
+    ``on_violation`` streams every violating terminal to the caller as
+    it is found (useful with ``stop_on_first=False`` on large models
+    where waiting for the full sweep wastes the early signal).  The
+    result's ``status`` property distinguishes an exhaustive clean
+    sweep (``"verified"``) from one that merely ran out of budget
+    (``"bounded"``, with ``bound_reason`` naming the bound hit).
     """
 
     t0 = _time.perf_counter()
@@ -97,6 +117,7 @@ def explore(
     best_time: int | None = None   # branch-and-bound incumbent
 
     while stack:
+        res.frontier_peak = max(res.frontier_peak, len(stack))
         state, trail = stack.pop()
         res.max_depth = max(res.max_depth, len(trail))
         G = dict(state.globals)
@@ -115,10 +136,13 @@ def explore(
 
         if violates(G):
             term = Terminal(G, trail if keep_trails else (), len(trail))
-            res.counterexample = term
+            if res.counterexample is None:
+                res.counterexample = term
             res.property_holds = False
             if collect_terminals:
                 res.terminals.append(term)
+            if on_violation is not None:
+                on_violation(term)
             if stop_on_first:
                 break
             continue
@@ -145,6 +169,7 @@ def explore(
 
         if len(trail) >= depth_limit:
             res.truncated = True
+            res.bound_reason = res.bound_reason or "depth_limit"
             continue
 
         for tr in succ:
@@ -156,6 +181,7 @@ def explore(
             res.states += 1
             if res.states > max_states:
                 res.truncated = True
+                res.bound_reason = "max_states"
                 stack.clear()
                 break
             stack.append((tr.state, trail + (tr.label,) if keep_trails else ()))
@@ -187,6 +213,7 @@ def _random_walk(model, violates, rng, depth_limit, res, t0, *,
         trail = trail + (tr.label,)
     else:
         res.truncated = True
+        res.bound_reason = "depth_limit"
     res.max_depth = len(trail)
     res.elapsed_s = _time.perf_counter() - t0
     return res

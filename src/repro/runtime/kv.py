@@ -43,11 +43,31 @@ Invariants the allocator maintains (tested in ``tests/test_kv.py``):
 
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 
 import numpy as np
 
 NO_PAGE = -1
+
+
+def _traced(fn):
+    """Record ``(method, args, ret)`` on ``self.trace`` when tracing is
+    on — the narrow op-trace hook :mod:`repro.verify.conformance`
+    replays against the abstract allocator model.  List returns are
+    frozen to tuples so traces are hashable/JSON-friendly."""
+
+    name = fn.__name__
+
+    @functools.wraps(fn)
+    def wrapper(self, *args):
+        ret = fn(self, *args)
+        if self.trace is not None:
+            rec = tuple(tuple(p) if isinstance(p, tuple) else p
+                        for p in ret) if isinstance(ret, list) else ret
+            self.trace.append((name, tuple(int(a) for a in args), rec))
+        return ret
+    return wrapper
 
 
 @dataclass(frozen=True)
@@ -109,6 +129,9 @@ class PagedKVAllocator:
         # allocates ABOVE it, so pages trimmed away (SWA) or still held
         # are never re-backed for positions already written
         self._top = np.full(n_slots, -1, np.int64)
+        # op-trace hook for repro.verify: set to a list to record every
+        # mutating call as (method, args, ret)
+        self.trace: list[tuple] | None = None
 
     # -- queries ------------------------------------------------------------
 
@@ -147,6 +170,20 @@ class PagedKVAllocator:
         page = int(self.page_table[slot, logical_page])
         return page != NO_PAGE and int(self.refcount[page]) > 1
 
+    def project(self) -> tuple:
+        """Canonical hashable projection of the allocator's mutable
+        state — the shared vocabulary between this class and the
+        abstract model in :mod:`repro.verify.models` (state agreement
+        along a replayed trail is projection equality)."""
+
+        return (
+            tuple(tuple(int(p) for p in row) for row in self.page_table),
+            tuple(int(r) for r in self.refcount),
+            tuple(int(o) for o in self.owner),
+            tuple(self._free),
+            tuple(int(t) for t in self._top),
+        )
+
     # -- mutation -----------------------------------------------------------
 
     def _deref(self, page: int) -> bool:
@@ -168,6 +205,7 @@ class PagedKVAllocator:
             self.owner[page] = int(holders[0][0]) if len(holders) else NO_PAGE
         return False
 
+    @_traced
     def ensure(self, slot: int, n_tokens: int) -> bool:
         """Back positions ``[0, n_tokens)`` of ``slot``; allocates only
         logical pages above the slot's high-water mark.  All-or-nothing:
@@ -195,6 +233,7 @@ class PagedKVAllocator:
         self._top[slot] = top_needed
         return True
 
+    @_traced
     def share(self, src_slot: int, dst_slot: int, n_tokens: int) -> int:
         """Map the pages backing positions ``[0, n_tokens)`` of
         ``src_slot`` into ``dst_slot``'s page table (refcounts bumped,
@@ -219,6 +258,7 @@ class PagedKVAllocator:
         self._top[dst_slot] = need - 1
         return need
 
+    @_traced
     def cow_pages(self, slot: int, start_pos: int,
                   end_pos: int) -> list[tuple[int, int]] | None:
         """Break sharing before ``slot`` writes positions
@@ -248,6 +288,7 @@ class PagedKVAllocator:
             pairs.append((old, new))
         return pairs
 
+    @_traced
     def release(self, slot: int) -> int:
         """Drop ``slot``'s reference to every page it maps (retire /
         deferral / preemption); a page returns to the free list only
@@ -261,6 +302,7 @@ class PagedKVAllocator:
             self._deref(page)
         return len(pages)
 
+    @_traced
     def rewind(self, slot: int, n_tokens: int) -> int:
         """Roll ``slot`` back so it backs exactly positions
         ``[0, n_tokens)`` again: free every page above
@@ -282,6 +324,7 @@ class PagedKVAllocator:
         self._top[slot] = min(int(self._top[slot]), keep - 1)
         return freed
 
+    @_traced
     def trim(self, slot: int, keep_from_pos: int) -> int:
         """Free pages of ``slot`` holding only positions strictly below
         ``keep_from_pos`` (sliding-window reclamation: positions that

@@ -254,8 +254,40 @@ class PrefixAffinityScheduler:
         return None
 
 
+class TracingScheduler:
+    """Decorator policy: forwards every hook to ``inner`` and records
+    the decisions as ``(hook, decision)`` tuples on :attr:`trace` — the
+    scheduler-side half of the shared trace vocabulary
+    (:mod:`repro.verify` replays server traces against the abstract
+    model; the allocator side is the ``trace`` hook on
+    :class:`~repro.runtime.kv.PagedKVAllocator`)."""
+
+    def __init__(self, inner: Scheduler):
+        self.inner = inner
+        self.trace: list[tuple[str, int | None]] = []
+
+    @property
+    def kind(self) -> str:
+        return f"traced-{self.inner.kind}"
+
+    def pick(self, server: "Server") -> int | None:
+        out = self.inner.pick(server)
+        self.trace.append(("pick", out))
+        return out
+
+    def victim(self, server: "Server") -> int | None:
+        out = self.inner.victim(server)
+        self.trace.append(("victim", out))
+        return out
+
+    def preempt_for(self, server: "Server") -> int | None:
+        out = self.inner.preempt_for(server)
+        self.trace.append(("preempt_for", out))
+        return out
+
+
 SCHEDULER_KINDS: tuple[str, ...] = tuple(sorted(_REGISTRY))
 
 __all__ = ["Scheduler", "FCFSScheduler", "PriorityScheduler",
-           "PrefixAffinityScheduler", "register_scheduler",
-           "make_scheduler", "SCHEDULER_KINDS"]
+           "PrefixAffinityScheduler", "TracingScheduler",
+           "register_scheduler", "make_scheduler", "SCHEDULER_KINDS"]

@@ -426,6 +426,9 @@ class Server:
         frames = getattr(req, "_frames", None)
         if self.api.cfg.is_encdec and frames is not None:
             kv = self.api.encode_cross_kv(
+                # verify: waive(alias-dispatch) -- request audio frames
+                # are request-immutable after submit; nothing writes
+                # them between here and the dispatch
                 self.params, jnp.asarray(frames)[None])
             xk, xv = self.state["xattn"]["k"], self.state["xattn"]["v"]
             self.state["xattn"]["k"] = xk.at[:, slot].set(
@@ -541,6 +544,9 @@ class Server:
             if "kv" not in entry:
                 continue
             entry = dict(entry)
+            # verify: waive(pool-write) -- 'entry' is a fresh dict copy
+            # two lines up; the shared pool only sees it via the
+            # blocks[key] swap below, never a mutated shared leaf
             entry["kv"] = jax.tree.map(
                 lambda a: a.at[:, dst].set(a[:, src]), entry["kv"])
             blocks[key] = entry

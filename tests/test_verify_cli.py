@@ -1,0 +1,71 @@
+"""``python -m repro.verify`` plumbing: exit codes, JSON report shape,
+trail files, replay round-trip."""
+
+import json
+
+import pytest
+
+from repro.verify.cli import main
+
+
+def test_lint_json_exits_zero_on_clean_tree(capsys):
+    assert main(["lint", "--json"]) == 0
+    out = json.loads(capsys.readouterr().out)
+    assert out["ok"] is True
+    assert out["findings"] == []
+    assert len(out["waived"]) >= 2
+
+
+def test_check_bounded_run_reports_and_passes(tmp_path, capsys):
+    # a tiny state budget: every model check must report "bounded"
+    # (bound exhausted is NOT "verified") but the gate still passes
+    # because nothing was violated
+    rc = main(["check", "--json", "--max-states", "300",
+               "--trail-dir", str(tmp_path)])
+    out = json.loads(capsys.readouterr().out)
+    assert rc == 0
+    assert out["ok"] is True
+    assert out["exhaustive"] is False
+    by_name = {c["name"]: c for c in out["checks"]}
+    assert by_name["alloc-invariants"]["status"] == "bounded"
+    assert by_name["alloc-invariants"]["bound_reason"] == "max_states"
+    assert by_name["alloc-invariants"]["frontier_peak"] > 0
+    # the small server models fit inside 300 states and stay verified
+    assert by_name["server-fcfs-pressure"]["status"] == "verified"
+    assert by_name["spec-cycle"]["status"] == "verified"
+
+
+def test_mutants_write_trails_that_replay_reproduces(tmp_path, capsys):
+    rc = main(["mutants", "--json", "--trail-dir", str(tmp_path)])
+    out = json.loads(capsys.readouterr().out)
+    assert rc == 0 and out["ok"] is True
+    assert {r["mutant"] for r in out["mutants"]} >= {
+        "share-skips-refcount", "ensure-partial-on-oom"}
+    for r in out["mutants"]:
+        assert r["caught"] and r["reproduced"], r
+        payload = json.loads(open(r["trail"]).read())
+        assert payload["allocator"] == r["mutant"]
+        assert payload["ops"]
+    # replay one trail through the CLI: exit 1 = reproduced
+    trail = out["mutants"][0]["trail"]
+    assert main(["replay", "--trail", trail]) == 1
+    rep = capsys.readouterr().out
+    assert "REPRODUCED" in rep
+
+
+def test_replay_clean_trail_exits_zero(tmp_path, capsys):
+    trail = tmp_path / "clean.json"
+    trail.write_text(json.dumps({
+        "model": "allocator", "allocator": "real",
+        "config": {"n_slots": 2, "page_size": 2, "pages_per_slot": 2,
+                   "n_pages": 3},
+        "ops": [["ensure", 0, 4], ["share", 0, 1, 2], ["release", 0]],
+    }))
+    assert main(["replay", "--trail", str(trail)]) == 0
+    assert "clean" in capsys.readouterr().out
+
+
+def test_unknown_trail_model_is_an_error(tmp_path):
+    trail = tmp_path / "bogus.json"
+    trail.write_text(json.dumps({"model": "nope", "ops": []}))
+    assert main(["replay", "--trail", str(trail)]) == 2

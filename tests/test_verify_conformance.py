@@ -1,0 +1,159 @@
+"""Conformance bridge: model vs real PagedKVAllocator, both directions,
+plus the mutant battery (the checker must catch every planted bug with
+a trail that replays as a concrete failure)."""
+
+import random
+
+import jax
+import pytest
+from _hypothesis_stub import hypothesis, st
+
+from repro.runtime.kv import PagedKVAllocator
+from repro.runtime.scheduler import TracingScheduler, make_scheduler
+from repro.verify.conformance import (ConformanceError, coupled_explore,
+                                      ops_from_trail, replay_ops,
+                                      trace_accepted)
+from repro.verify.models import AllocConfig, AllocatorSemantics
+from repro.verify.mutants import MUTANTS
+
+SMALL = AllocConfig(n_slots=2, page_size=2, pages_per_slot=2, n_pages=3)
+
+
+def test_real_allocator_conforms_exhaustively_on_small_config():
+    sem = AllocatorSemantics(SMALL, canonical=True)
+    res = coupled_explore(sem)
+    assert res.ok and res.status == "verified", res.message
+    assert res.transitions > 500
+
+
+def test_exact_mode_conformance_also_holds():
+    res = coupled_explore(AllocatorSemantics(SMALL, canonical=False),
+                          max_states=20_000)
+    assert res.ok, res.message
+
+
+@pytest.mark.parametrize("name", sorted(MUTANTS))
+def test_mutant_caught_with_replayable_trail(name):
+    sem = AllocatorSemantics(SMALL, canonical=True)
+    res = coupled_explore(sem, MUTANTS[name])
+    assert not res.ok, f"checker missed mutant {name}"
+    assert res.ops, "counterexample must carry an op trail"
+    # the trail reproduces the failure on a fresh mutant allocator...
+    with pytest.raises(ConformanceError):
+        replay_ops(sem, list(res.ops), MUTANTS[name])
+    # ...and the same ops replay clean on the correct allocator
+    replay_ops(sem, list(res.ops), PagedKVAllocator)
+
+
+def test_ops_from_trail_parses_select_labels():
+    trail = ("driver[0]:0:goto", "driver[0]:1:select=('ensure', 0, 2)",
+             "driver[0]:2:apply", "driver[0]:1:select=('release', 0)")
+    assert ops_from_trail(trail) == [("ensure", 0, 2), ("release", 0)]
+
+
+def test_replay_flags_wrong_expectation():
+    sem = AllocatorSemantics(SMALL, canonical=True)
+    # legal prefix, then an op whose model return (True) the real
+    # allocator cannot match because the pool is exhausted elsewhere
+    ops = [("ensure", 0, 4), ("ensure", 1, 4)]
+    # 2+2 pages needed > 3 in pool: model says second ensure fails too,
+    # so this replays CLEAN (agreement on failure is conformance)
+    alloc = replay_ops(sem, ops)
+    assert alloc.free_pages == 1
+
+
+# ---------------------------------------------------------------------------
+# direction 2: every real trace is a model path
+# ---------------------------------------------------------------------------
+
+
+def _random_walk_trace(seed: int, steps: int = 40):
+    """Drive a REAL allocator by ops the model deems enabled, recording
+    through the kv trace hook."""
+
+    rng = random.Random(seed)
+    sem = AllocatorSemantics(SMALL, canonical=False)
+    alloc = PagedKVAllocator(SMALL.kv_spec(), SMALL.n_slots)
+    alloc.trace = []
+    for _ in range(steps):
+        ops = sem.enabled_ops({"alloc": alloc.project()})
+        if not ops:   # pragma: no cover - SMALL never deadlocks
+            break
+        op = rng.choice(ops)
+        getattr(alloc, op[0])(*op[1:])
+    return alloc.trace
+
+
+def test_randomized_real_traces_are_model_paths():
+    for seed in range(25):
+        trace = _random_walk_trace(seed)
+        sem = AllocatorSemantics(SMALL, canonical=False)
+        trace_accepted(sem, trace)   # raises on any divergence
+
+
+@hypothesis.given(st.integers(min_value=0, max_value=10**6))
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_randomized_real_traces_are_model_paths_hypothesis(seed):
+    sem = AllocatorSemantics(SMALL, canonical=False)
+    trace_accepted(sem, _random_walk_trace(seed))
+
+
+def test_trace_accepted_rejects_canonical_semantics():
+    with pytest.raises(ValueError, match="exact"):
+        trace_accepted(AllocatorSemantics(SMALL, canonical=True), [])
+
+
+def test_trace_accepted_flags_tampered_trace():
+    trace = _random_walk_trace(3)
+    # find a recorded ensure and lie about its return
+    for i, (m, args, ret) in enumerate(trace):
+        if m == "ensure":
+            trace[i] = (m, args, not ret)
+            break
+    else:
+        pytest.skip("walk recorded no ensure")
+    with pytest.raises(ConformanceError):
+        trace_accepted(AllocatorSemantics(SMALL, canonical=False), trace)
+
+
+# ---------------------------------------------------------------------------
+# direction 2 at full scale: a REAL Server run
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def model():
+    from repro.configs import get_config
+    from repro.models import build_model
+    cfg = get_config("smollm-135m").reduced().replace(
+        logits_dtype="float32")
+    api = build_model(cfg)
+    return api, api.init(jax.random.PRNGKey(0))
+
+
+def test_real_server_allocator_trace_is_a_model_path(model):
+    """Every allocator call a real paged COW serving run makes — with
+    the real prefix scheduler making the decisions — is a legal path of
+    the abstract model with identical returns."""
+
+    from repro.runtime.serve import Server
+    api, params = model
+    sched = TracingScheduler(make_scheduler("prefix"))
+    srv = Server(api, params, batch=3, context=48, paged=True, page_size=4,
+                 prefill_chunk=8, scheduler=sched, share_prefix=True)
+    assert srv.scheduler.kind == "traced-prefix"
+    srv.alloc.trace = []
+    prefix = list(range(11, 29))
+    for i in range(4):
+        srv.submit(prefix + [40 + i, 50 + i], max_new=3)
+    srv.run_until_drained()
+    assert srv.alloc.trace, "paged run must touch the allocator"
+    assert sched.trace and any(h == "pick" for h, _ in sched.trace)
+
+    spec = srv.alloc.spec
+    sem = AllocatorSemantics(
+        AllocConfig(n_slots=srv.batch, page_size=spec.page_size,
+                    pages_per_slot=spec.pages_per_slot,
+                    n_pages=spec.n_pages),
+        canonical=False)
+    trace_accepted(sem, srv.alloc.trace)

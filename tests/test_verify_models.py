@@ -1,0 +1,260 @@
+"""The verify models + invariants + explorer budget satellite.
+
+Small configs here (the CLI's acceptance matrix runs the full
+over-committed 3x3>6 instance); the point of each test is a property
+of the machinery, not scale.
+"""
+
+import pytest
+
+from repro.core.explorer import explore
+from repro.verify.harness import (ServerConfig, ServerScenario, canon_pages,
+                                  empty_projection)
+from repro.verify.invariants import (allocator_invariants, drain_incomplete,
+                                     server_invariants, spec_invariants,
+                                     violated, violates_any)
+from repro.verify.models import (AllocConfig, AllocatorSemantics,
+                                 ServerSemantics, SpecConfig, SpecSemantics,
+                                 build_driver_model)
+from repro.verify.mutants import MUTANTS
+
+SMALL = AllocConfig(n_slots=2, page_size=2, pages_per_slot=2, n_pages=3)
+
+
+# ---------------------------------------------------------------------------
+# explorer budget satellite
+# ---------------------------------------------------------------------------
+
+
+def test_bounded_run_is_distinct_from_verified():
+    sem = AllocatorSemantics(AllocConfig(), canonical=True)
+    res = explore(build_driver_model(sem),
+                  violates_any(allocator_invariants()),
+                  schedule="por", max_states=50)
+    assert res.truncated and res.property_holds
+    assert res.status == "bounded"
+    assert res.bound_reason == "max_states"
+    assert res.frontier_peak > 0
+    assert res.states <= 50 + 1
+
+
+def test_depth_limit_reported_as_bound_reason():
+    sem = AllocatorSemantics(SMALL, canonical=True)
+    res = explore(build_driver_model(sem),
+                  violates_any(allocator_invariants()),
+                  schedule="por", depth_limit=4)
+    assert res.status == "bounded"
+    assert res.bound_reason == "depth_limit"
+
+
+def test_violation_wins_over_bound_and_on_violation_fires():
+    sem = AllocatorSemantics(SMALL, canonical=True)
+    seen = []
+    # "violation": any page allocated at all — reachable in one op
+    res = explore(build_driver_model(sem),
+                  lambda G: G["alloc"][4][0] >= 0,
+                  schedule="por", stop_on_first=False,
+                  on_violation=seen.append)
+    assert res.status == "violated" and not res.property_holds
+    assert res.counterexample is not None
+    assert seen and seen[0].trail == res.counterexample.trail
+    assert len(seen) >= 1
+
+
+def test_verified_status_on_exhausted_space():
+    sem = AllocatorSemantics(SMALL, canonical=True)
+    res = explore(build_driver_model(sem),
+                  violates_any(allocator_invariants()),
+                  schedule="por")
+    assert res.status == "verified"
+    assert not res.truncated and res.bound_reason is None
+    assert res.states > 100
+
+
+# ---------------------------------------------------------------------------
+# page-symmetry canonicalization
+# ---------------------------------------------------------------------------
+
+
+def test_canon_pages_fixes_initial_projection():
+    proj = empty_projection(SMALL.n_slots, SMALL.kv_spec())
+    assert canon_pages(proj) == proj
+
+
+def test_canon_pages_idempotent_and_structure_preserving():
+    sem = AllocatorSemantics(SMALL, canonical=False)
+    G = sem.init_globals()
+    for op in [("ensure", 0, 4), ("share", 0, 1, 2), ("release", 0),
+               ("ensure", 0, 2)]:
+        sem.apply(G, op)
+    c1 = canon_pages(G["alloc"])
+    assert canon_pages(c1) == c1
+    # same structure: refcount multiset, mapped-cell pattern, tops
+    assert sorted(c1[1]) == sorted(G["alloc"][1])
+    assert c1[4] == G["alloc"][4]
+    assert [[p == -1 for p in row] for row in c1[0]] == \
+        [[p == -1 for p in row] for row in G["alloc"][0]]
+
+
+def test_canonical_and_exact_models_agree_on_invariants():
+    for canonical in (False, True):
+        sem = AllocatorSemantics(SMALL, canonical=canonical)
+        res = explore(build_driver_model(sem),
+                      violates_any(allocator_invariants()),
+                      schedule="por")
+        assert res.status == "verified"
+
+
+def test_canonical_quotient_is_smaller():
+    exact = explore(build_driver_model(AllocatorSemantics(SMALL)),
+                    violates_any(allocator_invariants()), schedule="por")
+    quot = explore(
+        build_driver_model(AllocatorSemantics(SMALL, canonical=True)),
+        violates_any(allocator_invariants()), schedule="por")
+    assert quot.states < exact.states
+
+
+# ---------------------------------------------------------------------------
+# invariant predicates on seeded-bad states
+# ---------------------------------------------------------------------------
+
+
+def _bad(proj):
+    return violated(allocator_invariants(), {"alloc": proj})
+
+
+def test_invariants_catch_refcount_drift():
+    pt = ((0, -1), (-1, -1))
+    assert "refcount_conservation" in _bad(
+        (pt, (2, 0, 0), (0, -1, -1), (2, 1), (0, -1)))
+
+
+def test_invariants_catch_lost_page():
+    pt = ((-1, -1), (-1, -1))
+    # page 0 neither free nor held
+    assert "no_lost_pages" in _bad(
+        (pt, (0, 0, 0), (-1, -1, -1), (2, 1), (-1, -1)))
+
+
+def test_invariants_catch_double_free():
+    pt = ((-1, -1), (-1, -1))
+    assert "no_double_free" in _bad(
+        (pt, (0, 0, 0), (-1, -1, -1), (2, 1, 1), (-1, -1)))
+
+
+def test_invariants_catch_freed_page_still_mapped():
+    pt = ((0, -1), (-1, -1))
+    bad = _bad((pt, (0, 0, 0), (-1, -1, -1), (2, 1, 0), (0, -1)))
+    assert "freed_never_mapped" in bad
+
+
+def test_invariants_catch_owner_inconsistency():
+    pt = ((0, -1), (-1, -1))
+    # page 0 held by slot 0 but owner says slot 1
+    assert "owner_consistent" in _bad(
+        (pt, (1, 0, 0), (1, -1, -1), (2, 1), (0, -1)))
+
+
+def test_invariants_catch_entry_above_high_water():
+    pt = ((-1, 0), (-1, -1))
+    assert "high_water_clean" in _bad(
+        (pt, (1, 0, 0), (0, -1, -1), (2, 1), (-1, -1)))
+
+
+def test_clean_projection_passes_all():
+    assert _bad(empty_projection(2, SMALL.kv_spec())) == []
+
+
+# ---------------------------------------------------------------------------
+# the three machines, exhaustively
+# ---------------------------------------------------------------------------
+
+
+def test_allocator_model_verified_on_overcommitted_small_config():
+    sem = AllocatorSemantics(SMALL, canonical=True)
+    res = explore(build_driver_model(sem),
+                  violates_any(allocator_invariants()),
+                  schedule="por", collect_terminals=True)
+    assert res.status == "verified"
+    # no deadlock: some op is enabled at every state
+    assert res.terminals == []
+
+
+SCEN = ServerScenario(name="t", prompts=((3, 3, 3), (4, 4, 4, 4), (5, 5)),
+                      max_new=(2, 1, 1))
+
+
+@pytest.mark.parametrize("cfg,scen", [
+    (ServerConfig(policy="fcfs", batch=3), SCEN),
+    (ServerConfig(policy="fcfs", batch=3, share_prefix=True),
+     ServerScenario(name="share",
+                    prompts=((7, 7, 7, 7), (7, 7, 7, 5), (7, 7)),
+                    max_new=(2, 1, 1))),
+    (ServerConfig(policy="priority", batch=2, aging_slack=3),
+     ServerScenario(name="slo", prompts=((3, 3, 3), (4, 4), (5, 5, 5)),
+                    max_new=(2, 1, 1),
+                    slo=("batch", "interactive", "interactive"))),
+    (ServerConfig(policy="prefix", batch=3, share_prefix=True),
+     ServerScenario(name="pf", prompts=((7, 7, 7, 7), (7, 7, 7, 5), (9, 9)),
+                    max_new=(2, 1, 1))),
+], ids=["fcfs", "fcfs-share", "priority", "prefix"])
+def test_server_model_verified_and_drains(cfg, scen):
+    sem = ServerSemantics(cfg, scen)
+    res = explore(build_driver_model(sem),
+                  violates_any(server_invariants(cfg)),
+                  schedule="por", collect_terminals=True)
+    assert res.status == "verified", res.counterexample
+    assert res.terminals, "model must reach a drained terminal"
+    for t in res.terminals:
+        assert drain_incomplete(t.globals) == []
+
+
+def test_server_model_catches_planted_allocator_bug():
+    cfg = ServerConfig(policy="fcfs", batch=3, share_prefix=True)
+    scen = ServerScenario(name="share",
+                          prompts=((7, 7, 7, 7), (7, 7, 7, 5), (7, 7)),
+                          max_new=(2, 1, 1))
+    sem = ServerSemantics(cfg, scen,
+                          allocator_cls=MUTANTS["share-skips-refcount"])
+    res = explore(build_driver_model(sem),
+                  violates_any(server_invariants(cfg)),
+                  schedule="por")
+    assert res.status == "violated"
+    broken = violated(server_invariants(cfg), res.counterexample.globals)
+    assert broken
+
+
+def test_spec_model_verified_and_both_slots_retire():
+    cfg = SpecConfig()
+    sem = SpecSemantics(cfg)
+    res = explore(build_driver_model(sem),
+                  violates_any(spec_invariants(cfg)),
+                  schedule="por", collect_terminals=True)
+    assert res.status == "verified", res.counterexample
+    assert res.terminals
+    for t in res.terminals:
+        assert t.globals["done"] == (1, 1)
+        # every page handed back
+        assert len(t.globals["alloc"][3]) == cfg.n_pages
+
+
+def test_spec_model_exercises_draft_shrinking():
+    """At least one reachable state offers a spec op whose full depth
+    does NOT fit — the shrink loop's raison d'etre."""
+
+    cfg = SpecConfig()
+    sem = SpecSemantics(cfg)
+    seen_shrink = []
+
+    class Probe(SpecSemantics):
+        def apply(self, G, op):
+            if op[0] == "spec":
+                d = op[1]
+                if not self._grow_fits(G, 0, G["pos"][0] + d + 1):
+                    seen_shrink.append(op)
+            return SpecSemantics.apply(self, G, op)
+
+    probe = Probe(cfg)
+    explore(build_driver_model(probe),
+            violates_any(spec_invariants(cfg)), schedule="por")
+    assert seen_shrink, "pool never forced a draft shrink; tighten SpecConfig"
