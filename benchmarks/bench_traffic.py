@@ -51,7 +51,8 @@ def run(csv: list[str], *, arch: str = "smollm-135m", requests: int = 12,
         batch: int = 3, context: int = 64, page_size: int = 4,
         kv_pages: int = 30, max_new=(4, 8), prompt_len=(6, 18),
         burst: int = 4, burst_every: int = 8, prefix_len: int = 12,
-        prefill_chunk: int = 8, seed: int = 0) -> None:
+        prefill_chunk: int = 8, seed: int = 0,
+        trace_out: str | None = None) -> None:
     print("\n== trace-driven traffic: scheduling policy face-off ==")
     cfg = get_config(arch).reduced().replace(logits_dtype="float32")
     api = build_model(cfg)
@@ -98,6 +99,48 @@ def run(csv: list[str], *, arch: str = "smollm-135m", requests: int = 12,
         assert outs[policy] == base, \
             f"outputs diverged between {POLICIES[0]} and {policy}"
     print(f"  -> outputs byte-identical across all {len(POLICIES)} policies")
+
+    if trace_out is not None:
+        # the same prefix-policy drain, re-run with full observability
+        # attached: lifecycle spans, metrics, and the ONLINE conformance
+        # monitor checking every allocator op against the verified
+        # model.  Overhead is traced-vs-untraced wall on the identical
+        # drain under identical warmup/iters (obs attaches to the one
+        # timed call, so both sides time exactly one drain on a warm
+        # jit cache); outputs must stay byte-identical.
+        print("\n== observability: traced + monitored drain ==")
+        from repro.obs import Observability, validate_trace
+        base_us = timed_trace_drain(
+            api, params, trace, batch=batch, context=context,
+            prefill_chunk=prefill_chunk, paged=True, page_size=page_size,
+            kv_pages=kv_pages, scheduler="prefix", share_prefix=True,
+            warmup=2, iters=1)
+        obs = Observability(trace=True, metrics=True, monitor=True)
+        stats: dict = {}
+        traced_us = timed_trace_drain(
+            api, params, trace, batch=batch, context=context,
+            prefill_chunk=prefill_chunk, paged=True, page_size=page_size,
+            kv_pages=kv_pages, scheduler="prefix", share_prefix=True,
+            obs=obs, stats_out=stats, warmup=2, iters=1)
+        assert _outputs(stats.pop("records")) == outs["prefix"], \
+            "tracing changed drain outputs"
+        assert obs.monitor is not None and obs.monitor.accepted, \
+            f"conformance monitor tripped: {obs.monitor.violation}"
+        assert obs.monitor.ops_checked > 0, "monitor saw no allocator ops"
+        doc = obs.export(trace_out)
+        problems = validate_trace(doc)
+        assert not problems, f"exported trace fails schema: {problems}"
+        overhead = traced_us / base_us - 1.0
+        n_events = len(doc["traceEvents"])
+        print(f"  untraced {base_us / 1e3:.1f} ms, traced+monitored "
+              f"{traced_us / 1e3:.1f} ms ({overhead:+.1%}); "
+              f"{n_events} events, {obs.monitor.ops_checked} allocator "
+              f"ops model-checked -> {trace_out}")
+        csv.append(f"traffic_traced,{traced_us:.1f},"
+                   f"overhead_pct={100 * overhead:.1f};"
+                   f"monitor=accepted;"
+                   f"ops_checked={obs.monitor.ops_checked};"
+                   f"events={n_events}")
 
     print("\n== prefix sharing at equal pages ==")
     # twice the slots, ~60% of the pages: the POOL is the binding

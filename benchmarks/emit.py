@@ -6,6 +6,13 @@ machine-readable artifact CI uploads (previously a private helper in
 ``run.py`` hardwired to two filenames).  :func:`csv_to_doc` parses the
 rows, :func:`write_artifact` does the atomic write, :func:`emit` is the
 one-call form any bench can use for its own ``BENCH_<name>.json``.
+
+Every doc carries the SAME provenance block
+(:func:`repro.tune.artifact.provenance_meta` — host, machine, python,
+tool, UTC timestamp) that tuning-cache exports and calibration
+trajectories stamp, so a bench artifact, the cache entries tuned on
+the same box, and the modeled-vs-measured trajectory rows are
+cross-referenceable by host + time window.
 """
 
 from __future__ import annotations
@@ -14,6 +21,8 @@ import json
 import os
 import tempfile
 from pathlib import Path
+
+from repro.tune.artifact import provenance_meta
 
 
 def csv_to_doc(csv: list[str], wall_s: float) -> dict:
@@ -46,7 +55,8 @@ def csv_to_doc(csv: list[str], wall_s: float) -> dict:
         if parsed:
             entry["derived"] = parsed
         entries.append(entry)
-    return {"wall_s": round(wall_s, 3), "benchmarks": entries}
+    return {"wall_s": round(wall_s, 3), "meta": provenance_meta(),
+            "benchmarks": entries}
 
 
 def write_artifact(path: str | os.PathLike, doc: dict) -> Path:

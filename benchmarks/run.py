@@ -14,7 +14,8 @@ artifact.
 ``--paged`` runs only the paged-vs-contiguous KV cache drain.
 ``--spec`` runs only the speculative-vs-one-token decode drain.
 ``--traffic`` runs only the trace-driven scheduling/prefix-sharing
-benchmark (and writes ``BENCH_traffic.json``).
+benchmark (writes ``BENCH_traffic.json`` plus ``TRACE_traffic.json``,
+a Perfetto-loadable ``repro.obs`` trace of the monitored drain).
 ``--calibrate`` runs only the platform-calibration probes + trajectory
 (writes ``BENCH_calibrate.json`` and appends ``BENCH_calibration.json``).
 
@@ -73,7 +74,8 @@ def main(argv=None) -> None:
     elif args.spec:
         bench_spec.run(csv, **bench_spec.SMOKE)
     elif args.traffic:
-        bench_traffic.run(csv, **bench_traffic.SMOKE)
+        bench_traffic.run(csv, **bench_traffic.SMOKE,
+                          trace_out="TRACE_traffic.json")
     elif args.smoke:
         bench_table3.run(csv)
         bench_tpu_tuning.run(csv, cells=[("minitron-8b", "train_4k", 1)])
@@ -95,7 +97,8 @@ def main(argv=None) -> None:
         bench_prefill.run(csv, **bench_prefill.FULL)
         bench_paged.run(csv, **bench_paged.FULL)
         bench_spec.run(csv, **bench_spec.FULL)
-        bench_traffic.run(csv, **bench_traffic.FULL)
+        bench_traffic.run(csv, **bench_traffic.FULL,
+                          trace_out="TRACE_traffic.json")
         bench_roofline.run(csv)
     dt = time.perf_counter() - t0
 

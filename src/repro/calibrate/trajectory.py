@@ -20,7 +20,6 @@ from __future__ import annotations
 import json
 import os
 import tempfile
-import time
 from pathlib import Path
 from typing import Any, Mapping, Sequence
 
@@ -103,9 +102,14 @@ def append_run(records: Sequence[Mapping[str, Any]], *,
     trajectory artifact at ``path`` (atomic replace); returns the run
     doc that was written."""
 
+    from ..tune.artifact import provenance_meta
     spec = get_platform_spec()
+    meta = provenance_meta()
     run = {
-        "created_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "meta": meta,
+        # created_utc predates the shared provenance block; kept as a
+        # top-level key (same value) for existing trajectory readers
+        "created_utc": meta["created_utc"],
         "platform": {"backend": spec.backend,
                      "device_kind": spec.device_kind},
         "source": spec.source,

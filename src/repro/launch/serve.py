@@ -55,6 +55,19 @@ def main(argv=None) -> None:
                          "model rollout)")
     ap.add_argument("--spec-depth", type=int, default=4,
                     help="draft tokens verified per speculative tick")
+    ap.add_argument("--trace", metavar="OUT.json", default=None,
+                    help="record lifecycle/tick spans and write the "
+                         "repro.obs trace artifact (Perfetto-loadable) "
+                         "here; with --paged the online conformance "
+                         "monitor validates the allocator op stream")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print the drain's metrics registry as "
+                         "Prometheus text exposition")
+    ap.add_argument("--profile", action="store_true",
+                    help="per-tick phase breakdown (prefill vs decode "
+                         "vs speculate vs COW vs host); syncs the "
+                         "device per phase, so the drain itself runs "
+                         "slower")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--tune-batch", action="store_true",
                     help="pick the slot count via repro.tune")
@@ -151,11 +164,18 @@ def main(argv=None) -> None:
         scheduler = str(picked["policy"])
         share_prefix = share_prefix or scheduler == "prefix"
 
+    obs = None
+    if args.trace or args.metrics or args.profile:
+        from ..obs import Observability
+        obs = Observability(trace=args.trace is not None or args.profile,
+                            metrics=True, profile=args.profile,
+                            monitor=paged)
     server = Server(api, params, batch=batch, context=args.context,
                     prefill_chunk=prefill_chunk, paged=paged,
                     page_size=page_size, kv_pages=args.kv_pages,
                     speculate=speculate, spec_depth=spec_depth,
-                    scheduler=scheduler, share_prefix=share_prefix)
+                    scheduler=scheduler, share_prefix=share_prefix,
+                    obs=obs)
     rng = np.random.default_rng(args.seed)
     for _ in range(args.requests):
         prompt = rng.integers(0, cfg.vocab, args.prompt_len).tolist()
@@ -197,6 +217,19 @@ def main(argv=None) -> None:
               f"ticks/token={st['ticks_per_token']:.2f}")
     for r in done[:3]:
         print(f"  req{r.rid}: prompt={r.prompt[:4]}... out={r.out}")
+    if obs is not None:
+        doc = obs.export(args.trace)
+        if args.trace:
+            print(f"  trace: {len(doc['traceEvents'])} events -> "
+                  f"{args.trace} (open in https://ui.perfetto.dev)")
+        if obs.monitor is not None:
+            mon = doc["monitor"]
+            print(f"  conformance monitor: {mon['status']} "
+                  f"({mon['ops_checked']} allocator ops checked)")
+        if args.profile and obs.profiler is not None:
+            print(obs.profiler.format())
+        if args.metrics and obs.registry is not None:
+            print(obs.registry.to_prometheus(), end="")
 
 
 if __name__ == "__main__":

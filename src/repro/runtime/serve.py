@@ -137,7 +137,7 @@ class Server:
                  page_size: int = 16, kv_pages: int | None = None,
                  speculate: Any = None, spec_depth: int = 4,
                  scheduler: str | Scheduler | None = None,
-                 share_prefix: bool = False):
+                 share_prefix: bool = False, obs: Any = None):
         self.api = api
         self.params = params
         self.batch = batch
@@ -294,6 +294,14 @@ class Server:
                 jax.jit(vstep_paged if paged else vstep))
         self._step, self._prefill_step, self._verify_step = cache[paged]
 
+        # observability is strictly additive: every hook below is
+        # guarded by `if self.obs is not None` and records host state
+        # the engine already materialized, so obs=None drains are
+        # untouched and obs-attached drains are output-identical.
+        self.obs = obs
+        if obs is not None:
+            obs.attach(self)
+
     # -- API ----------------------------------------------------------------
     def submit(self, prompt: list[int], max_new: int,
                frames: Any = None, *, slo: str = "interactive",
@@ -323,6 +331,8 @@ class Server:
                       deadline=deadline)
         req._frames = frames  # type: ignore[attr-defined]
         self.queue.append(req)
+        if self.obs is not None:
+            self.obs.on_submit(self, req)
         return req
 
     # -- scheduler-facing queries (the policy contract) ---------------------
@@ -435,6 +445,8 @@ class Server:
                 kv["k"][:, 0].astype(xk.dtype))
             self.state["xattn"]["v"] = xv.at[:, slot].set(
                 kv["v"][:, 0].astype(xv.dtype))
+        if self.obs is not None:
+            self.obs.on_admit(self, req, slot, start)
 
     def _backed_prefix(self, slot: int) -> int:
         """Tokens from position 0 whose pages ``slot`` still maps (SWA
@@ -473,14 +485,15 @@ class Server:
             return None, 0
         return best, best_len
 
-    def _preempt(self, slot: int) -> None:
+    def _preempt(self, slot: int, reason: str = "slo-preempt") -> None:
         """Evict ``slot`` mid-flight: pages released (refcounts
         decremented — pages shared with other slots survive), request
         requeued at the FRONT with prompt and generated tokens intact.
         On re-admission the whole stream re-prefills through the
         chunked path, which emits the same next token the undisturbed
         slot would have — chunked prefill is tokenwise-exact — so
-        preemption never changes a request's output."""
+        preemption never changes a request's output.  ``reason``
+        (policy preemption vs page-OOM defer) is observability-only."""
 
         req = self.slot_req[slot]
         req._cursor = 0  # type: ignore[attr-defined]
@@ -491,6 +504,8 @@ class Server:
         self.slot_req[slot] = None
         self.slot_pos[slot] = 0
         self._slot_dirty[slot] = True
+        if self.obs is not None:
+            self.obs.on_preempt(self, req, slot, reason)
 
     def _evict_for(self, slot: int) -> int | None:
         """Page-OOM backpressure: the policy names a victim, the engine
@@ -498,7 +513,7 @@ class Server:
 
         victim = self.scheduler.victim(self)
         if victim is not None:
-            self._preempt(victim)
+            self._preempt(victim, reason="oom-defer")
             self.deferrals += 1
         return victim
 
@@ -584,6 +599,8 @@ class Server:
             self._slot_dirty[slot] = True
             if self.paged:
                 self.alloc.release(slot)
+            if self.obs is not None:
+                self.obs.on_retire(self, req, slot)
 
     def kv_stats(self) -> dict[str, float]:
         """Cache occupancy snapshot: live tokens vs reserved capacity
@@ -711,7 +728,13 @@ class Server:
                 if self.share_prefix and self.slot_req[s] is req:
                     cow_pairs.extend(self._cow_range(s, pos, end))
             if cow_pairs:
+                ob = self.obs
+                t0 = (ob.phase_begin("cow_copy", self.ticks)
+                      if ob is not None else 0.0)
                 self._copy_pages(cow_pairs)
+                if ob is not None:
+                    ob.phase_end("cow_copy", self.ticks, t0,
+                                 sync=self.state, pages=len(cow_pairs))
             self.peak_used_pages = max(self.peak_used_pages,
                                        self.alloc.used_pages)
         active = [s for s in range(self.batch) if self.slot_req[s] is not None]
@@ -720,6 +743,9 @@ class Server:
             return 0
         self.ticks += 1
         self.slot_ticks += len(active)
+        ob = self.obs
+        if ob is not None:
+            ob.on_tick_begin(self, self.ticks)
         decode = [s for s in active if self._phase(s) == "decode"]
         spec = [s for s in decode if s in drafts]
         decode = [s for s in decode if s not in drafts]
@@ -728,6 +754,8 @@ class Server:
                       if self.paged else None)
 
         if decode:
+            if ob is not None:
+                t0 = ob.phase_begin("decode", self.ticks)
             tokens = np.zeros((self.batch, 1), np.int32)
             mask = np.zeros(self.batch, bool)
             for s in decode:
@@ -746,8 +774,13 @@ class Server:
                 req.out.append(int(nxt[s]))
                 self.tokens_generated += 1
                 self._retire_if_done(s)
+            if ob is not None:
+                ob.phase_end("decode", self.ticks, t0, sync=self.state,
+                             slots=len(decode))
 
         if spec:
+            if ob is not None:
+                t0 = ob.phase_begin("speculate", self.ticks)
             # speculation: verify the chunk [pending token, drafts...]
             # at absolute positions pos..pos+d in one forward, accept
             # the longest prefix of drafts matching the verifier's own
@@ -797,8 +830,13 @@ class Server:
                     # the table must match a never-speculated drain
                     self.alloc.rewind(s, int(self.slot_pos[s]))
                 self._retire_if_done(s)
+            if ob is not None:
+                ob.phase_end("speculate", self.ticks, t0,
+                             sync=self.state, slots=len(spec))
 
         if prefill:
+            if ob is not None:
+                t0 = ob.phase_begin("prefill", self.ticks)
             T = self.prefill_chunk
             tokens = np.zeros((self.batch, T), np.int32)
             lengths = np.zeros(self.batch, np.int32)
@@ -826,6 +864,9 @@ class Server:
                     req.out.append(int(nxt[s]))
                     self.tokens_generated += 1
                     self._retire_if_done(s)
+            if ob is not None:
+                ob.phase_end("prefill", self.ticks, t0, sync=self.state,
+                             slots=len(prefill))
 
         # sliding-window reclamation: pages whose positions all fell out
         # of the window are never attended again — hand them back.  The
@@ -835,6 +876,9 @@ class Server:
             for s in range(self.batch):
                 if self.slot_req[s] is not None:
                     self.alloc.trim(s, max(0, int(self.slot_pos[s]) - w + 1))
+        if ob is not None:
+            ob.on_tick_end(self, self.ticks, n_decode=len(decode),
+                           n_spec=len(spec), n_prefill=len(prefill))
         return len(active)
 
     def run_until_drained(self, max_ticks: int = 10_000) -> None:

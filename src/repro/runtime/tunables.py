@@ -39,11 +39,23 @@ K_AND_V = 2                 # two tensors per layer
 # available as get_platform_spec().dispatch_s for callers sizing them.
 
 
+def publish_drain_stats(registry, stats: Mapping[str, float], *,
+                        prefix: str = "serve") -> None:
+    """Publish a drain's scalar counters into a
+    :class:`~repro.obs.metrics.MetricsRegistry` as ``prefix.``-dotted
+    gauges (gauges, not counters: the values are per-drain snapshots,
+    not monotone accumulations across drains)."""
+
+    for key, value in stats.items():
+        if isinstance(value, (int, float)):
+            registry.gauge(f"{prefix}.{key}").set(float(value))
+
+
 def timed_server_drain(api, params, *, batch: int, context: int,
                        prompts, max_new: int, prefill_chunk: int = 32,
                        paged: bool = False, page_size: int = 16,
                        kv_pages: int | None = None, speculate: Any = None,
-                       spec_depth: int = 4,
+                       spec_depth: int = 4, registry: Any = None,
                        stats_out: dict | None = None, warmup: int = 1,
                        iters: int = 1) -> float:
     """Median wall-clock microseconds to drain ``prompts`` (a list of
@@ -55,13 +67,20 @@ def timed_server_drain(api, params, *, batch: int, context: int,
     absorb the step compiles for the batch/chunk shape.
     ``speculate``/``spec_depth`` pass through to ``Server`` (hand a
     shared Drafter INSTANCE across calls to reuse a draft model's jit
-    cache).  ``stats_out`` (a dict) receives the last drain's
-    ``Server.stats`` snapshot — real proposed/accepted counts for
-    measure() provenance."""
+    cache).
+
+    The last drain's ``Server.stats`` snapshot is published into
+    ``registry`` (a :class:`~repro.obs.metrics.MetricsRegistry`) as
+    ``serve.``-prefixed gauges; ``stats_out`` (a dict) is the
+    back-compat shim — it is rebuilt FROM the registry, so both views
+    carry identical keys and values and existing callers (and the
+    tuning-cache fingerprints built on them) are unchanged."""
 
     from ..kernels.common import time_fn
+    from ..obs.metrics import MetricsRegistry
     from .serve import Server
     prompts = [list(p) for p in prompts]
+    reg = registry if registry is not None else MetricsRegistry()
 
     def drain() -> None:
         srv = Server(api, params, batch=batch, context=context,
@@ -71,9 +90,10 @@ def timed_server_drain(api, params, *, batch: int, context: int,
         for prompt in prompts:
             srv.submit(prompt, max_new=max_new)
         srv.run_until_drained()
+        publish_drain_stats(reg, srv.stats(), prefix="serve")
         if stats_out is not None:
             stats_out.clear()
-            stats_out.update(srv.stats())
+            stats_out.update(reg.collect("serve"))
 
     return time_fn(drain, warmup=warmup, iters=iters)
 
@@ -82,6 +102,7 @@ def timed_trace_drain(api, params, trace, *, batch: int, context: int,
                       prefill_chunk: int = 32, paged: bool = True,
                       page_size: int = 16, kv_pages: int | None = None,
                       scheduler: Any = None, share_prefix: bool = False,
+                      obs: Any = None, registry: Any = None,
                       stats_out: dict | None = None, warmup: int = 1,
                       iters: int = 1) -> float:
     """Median wall-clock microseconds to drain a
@@ -89,28 +110,47 @@ def timed_trace_drain(api, params, trace, *, batch: int, context: int,
     :class:`~repro.runtime.serve.Server` under ``scheduler`` — the
     harness behind :class:`SchedulerTunable.measure` and
     ``bench_traffic``.  The trace is pre-generated (seeded), so every
-    policy drains the identical arrival sequence.  ``stats_out``
-    receives the last drain's :func:`~repro.runtime.workload.summarize`
-    record merged with the server's engine counters."""
+    policy drains the identical arrival sequence.
+
+    The last drain's :func:`~repro.runtime.workload.summarize` record
+    and selected engine counters are published into ``registry`` as
+    ``traffic.``-prefixed gauges; ``stats_out`` is the back-compat shim
+    rebuilt FROM the registry (plus the non-scalar ``records``
+    passthrough the benchmarks read outputs from), so existing callers
+    see the identical dict they always did.  ``obs`` (an
+    :class:`~repro.obs.observe.Observability`) attaches to the LAST
+    drain only — warmup drains and timing iterations before it stay
+    untraced so the traced drain's span set covers exactly one
+    drain."""
 
     from ..kernels.common import time_fn
+    from ..obs.metrics import MetricsRegistry
     from .serve import Server
     from .workload import drive_trace, summarize
 
+    reg = registry if registry is not None else MetricsRegistry()
+    total = max(0, warmup) + max(1, iters)   # time_fn's call count
+    calls = 0
+
     def drain() -> None:
+        nonlocal calls
+        calls += 1
         srv = Server(api, params, batch=batch, context=context,
                      prefill_chunk=prefill_chunk, paged=paged,
                      page_size=page_size, kv_pages=kv_pages,
-                     scheduler=scheduler, share_prefix=share_prefix)
+                     scheduler=scheduler, share_prefix=share_prefix,
+                     obs=obs if calls == total else None)
         records = drive_trace(srv, trace)
+        summary = summarize(records, srv.ticks)
+        st = srv.stats()
+        for k in ("prefill_chunks", "deferrals", "preemptions",
+                  "shared_tokens", "cow_copies", "peak_active",
+                  "mean_active"):
+            summary[k] = st[k]
+        publish_drain_stats(reg, summary, prefix="traffic")
         if stats_out is not None:
             stats_out.clear()
-            stats_out.update(summarize(records, srv.ticks))
-            st = srv.stats()
-            for k in ("prefill_chunks", "deferrals", "preemptions",
-                      "shared_tokens", "cow_copies", "peak_active",
-                      "mean_active"):
-                stats_out[k] = st[k]
+            stats_out.update(reg.collect("traffic"))
             stats_out["records"] = records
 
     return time_fn(drain, warmup=warmup, iters=iters)
@@ -745,7 +785,8 @@ def choose_scheduler(api=None, *, cache="default", engine: str = "measure",
             int(res.best_config["age_limit"])), res
 
 
-__all__ = ["KV_CACHE_BYTES", "K_AND_V", "timed_server_drain",
+__all__ = ["KV_CACHE_BYTES", "K_AND_V", "publish_drain_stats",
+           "timed_server_drain",
            "timed_trace_drain", "kv_cache_stream_s",
            "DecodeBatchTunable", "PrefillChunkTunable", "KVPageTunable",
            "SchedulerTunable", "decode_batch_tunable",

@@ -114,19 +114,36 @@ def generate_trace(cfg: TraceConfig) -> list[TraceRequest]:
 
 
 def drive_trace(server, trace: list[TraceRequest], *,
-                max_ticks: int = 200_000) -> dict[int, dict]:
+                max_ticks: int = 200_000,
+                recorder=None) -> dict[int, dict]:
     """Feed ``trace`` into ``server`` on the tick clock and drain it.
 
     Requests are submitted when the clock reaches their arrival tick
     (idle gaps fast-forward), the server ticks until every request
     retires, and each request's record — finish tick, latency, deadline
-    met, output tokens — is returned keyed by trace rid."""
+    met, output tokens — is returned keyed by trace rid.
 
+    The per-request bookkeeping is TRACE EVENTS, not a private dict:
+    the driver emits ``workload.submitted`` / ``workload.retired``
+    instants (driver-clock arrival/finish in their args) into the
+    server's attached :class:`~repro.obs.observe.Observability`
+    recorder — or a local recorder when none is attached — and
+    :func:`records_from_events` rebuilds the records from them.  One
+    source of truth: the numbers :func:`summarize` reports are exactly
+    the numbers a Perfetto view of the trace shows."""
+
+    from ..obs.trace import TraceRecorder
+    rec = recorder
+    if rec is None:
+        obs = getattr(server, "obs", None)
+        rec = obs.recorder if obs is not None else None
+    if rec is None:
+        rec = TraceRecorder()
     pending = sorted(trace, key=lambda r: (r.arrival, r.rid))
     nxt = 0
     clock = 0
+    requests: dict[int, "object"] = {}  # trace rid -> Request
     live: dict[int, int] = {}           # server rid -> trace rid
-    records: dict[int, dict] = {}
     seen_done = 0
     while nxt < len(pending) or server.queue or \
             any(r is not None for r in server.slot_req):
@@ -140,21 +157,53 @@ def drive_trace(server, trace: list[TraceRequest], *,
             req = server.submit(list(tr.prompt), tr.max_new, slo=tr.slo,
                                 deadline=float(tr.deadline))
             live[req.rid] = tr.rid
-            records[tr.rid] = {"arrival": tr.arrival, "slo": tr.slo,
-                               "deadline": tr.deadline, "request": req}
+            requests[tr.rid] = req
+            rec.instant("workload.submitted",
+                        track=("request", req.rid), tick=server.ticks,
+                        rid=tr.rid, arrival=tr.arrival, slo=tr.slo,
+                        deadline=tr.deadline)
         server.tick()
         clock += 1
         while seen_done < len(server.completed):
             req = server.completed[seen_done]
             seen_done += 1
-            rec = records[live[req.rid]]
-            rec["finish"] = clock
-            rec["latency"] = clock - rec["arrival"]
-            rec["met"] = (rec["deadline"] <= 0
-                          or clock <= rec["deadline"])
-            rec["tokens"] = len(req.out)
+            rec.instant("workload.retired",
+                        track=("request", req.rid), tick=server.ticks,
+                        rid=live[req.rid], finish=clock,
+                        tokens=len(req.out))
         if clock > max_ticks:
             raise RuntimeError("trace did not drain")
+    return records_from_events(rec.events, requests)
+
+
+def records_from_events(events: list[dict],
+                        requests: Mapping[int, "object"] | None = None,
+                        ) -> dict[int, dict]:
+    """Per-request records (the :func:`summarize` input) rebuilt from
+    ``workload.submitted`` / ``workload.retired`` trace events, keyed
+    by trace rid.  ``requests`` (trace rid -> live
+    :class:`~repro.runtime.serve.Request`) attaches the concrete
+    request objects the benchmarks read outputs from; records parsed
+    back from an exported trace simply omit them."""
+
+    records: dict[int, dict] = {}
+    for ev in events:
+        args = ev.get("args", ev)
+        if ev["name"] == "workload.submitted":
+            records[args["rid"]] = {"arrival": args["arrival"],
+                                    "slo": args["slo"],
+                                    "deadline": args["deadline"]}
+        elif ev["name"] == "workload.retired":
+            r = records[args["rid"]]
+            r["finish"] = args["finish"]
+            r["latency"] = args["finish"] - r["arrival"]
+            r["met"] = (r["deadline"] <= 0
+                        or args["finish"] <= r["deadline"])
+            r["tokens"] = args["tokens"]
+    if requests is not None:
+        for rid, req in requests.items():
+            if rid in records:
+                records[rid]["request"] = req
     return records
 
 
@@ -184,4 +233,4 @@ def summarize(records: dict[int, dict], ticks: int) -> dict[str, float]:
 
 
 __all__ = ["SLO_CLASSES", "TraceRequest", "TraceConfig", "generate_trace",
-           "drive_trace", "summarize"]
+           "drive_trace", "records_from_events", "summarize"]

@@ -209,6 +209,53 @@ def replay_ops(sem: AllocatorSemantics, ops: list[tuple],
     return alloc
 
 
+class TraceChecker:
+    """Incremental direction-2 conformance: feed ``(method, args,
+    ret)`` records one at a time, as a real allocator emits them.
+
+    The checker walks the abstract model alongside the real op stream —
+    each record must be legal at the model's current state and return
+    exactly what the model returns — which is what lets the online
+    monitor (:mod:`repro.obs.monitor`) validate a LIVE drain without
+    re-scanning the trace prefix every tick.  :meth:`state_divergence`
+    adds the stronger check an offline trace cannot make: compare the
+    real allocator's projection against the tracked model state, which
+    catches mutations whose per-op returns still agree (leaked
+    refcounts, stale table entries) at the first poll after the bad
+    op rather than N ops later."""
+
+    def __init__(self, sem: AllocatorSemantics):
+        if sem.canonical:
+            raise ValueError(
+                "TraceChecker needs an exact (non-canonical) semantics: "
+                "real traces carry concrete page ids")
+        self.sem = sem
+        self.G = sem.init_globals()
+        self.count = 0
+
+    def feed(self, record: tuple) -> None:
+        method, args, real_ret = record
+        op = (method, *tuple(args))
+        if not self.sem.legal(self.G, op):
+            raise ConformanceError(
+                f"trace step {self.count} {op!r}: not a legal model op "
+                f"at this state")
+        want_ret = self.sem.apply(self.G, op)
+        if _norm(real_ret) != want_ret:
+            raise ConformanceError(
+                f"trace step {self.count} {op!r}: real returned "
+                f"{real_ret!r}, model {want_ret!r}")
+        self.count += 1
+
+    def state_divergence(self, alloc: PagedKVAllocator) -> str | None:
+        real = self.sem.observe(alloc.project())
+        if real != self.G["alloc"]:
+            return (f"state divergence after trace step "
+                    f"{self.count - 1}:\n  real:  {real}\n"
+                    f"  model: {self.G['alloc']}")
+        return None
+
+
 def trace_accepted(sem: AllocatorSemantics,
                    trace: list[tuple]) -> None:
     """Direction 2: a ``(method, args, ret)`` trace recorded by a real
@@ -216,22 +263,11 @@ def trace_accepted(sem: AllocatorSemantics,
     op legal at its state, every return matching the model's.  Raises
     :class:`ConformanceError` otherwise."""
 
-    if sem.canonical:
-        raise ValueError("trace_accepted needs an exact (non-canonical) "
-                         "semantics: real traces carry concrete page ids")
-    G = sem.init_globals()
-    for i, (method, args, real_ret) in enumerate(trace):
-        op = (method, *args)
-        if not sem.legal(G, op):
-            raise ConformanceError(
-                f"trace step {i} {op!r}: not a legal model op at this "
-                f"state")
-        want_ret = sem.apply(G, op)
-        if _norm(real_ret) != want_ret:
-            raise ConformanceError(
-                f"trace step {i} {op!r}: real returned "
-                f"{real_ret!r}, model {want_ret!r}")
+    checker = TraceChecker(sem)
+    for record in trace:
+        checker.feed(record)
 
 
-__all__ = ["ConformanceError", "CoupledResult", "coupled_explore",
-           "ops_from_trail", "replay_ops", "trace_accepted"]
+__all__ = ["ConformanceError", "CoupledResult", "TraceChecker",
+           "coupled_explore", "ops_from_trail", "replay_ops",
+           "trace_accepted"]

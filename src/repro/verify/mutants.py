@@ -13,13 +13,22 @@ real-allocator failure.
 
 from __future__ import annotations
 
-from ..runtime.kv import NO_PAGE, PagedKVAllocator
+from ..runtime.kv import NO_PAGE, PagedKVAllocator, _traced
 
 MUTANTS: dict[str, type[PagedKVAllocator]] = {}
+
+# the base allocator's op-trace surface; mutant overrides of these must
+# re-wrap in ``_traced`` or the buggy op itself vanishes from the op
+# stream an online monitor records (the violation would still be caught
+# via state projection, but the dumped trail could not reproduce it)
+_TRACED_OPS = ("ensure", "share", "cow_pages", "release", "rewind", "trim")
 
 
 def _mutant(name: str):
     def deco(cls):
+        for op in _TRACED_OPS:
+            if op in vars(cls):
+                setattr(cls, op, _traced(vars(cls)[op]))
         MUTANTS[name] = cls
         return cls
     return deco

@@ -1,0 +1,435 @@
+"""Observability subsystem tests: trace recorder round-trip and span
+nesting, metrics registry semantics, the stats_out shim parity, the
+trace-event-backed workload records, and the online conformance monitor
+end-to-end — a planted allocator mutant trips it mid-drain and the
+dumped trail replays to a real failure through ``repro.verify``."""
+
+import json
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.obs import (Histogram, MetricsRegistry, Observability,
+                       TraceRecorder, export_trace, parse_trace,
+                       spans_from_events, validate_trace)
+from repro.runtime.serve import Server
+from repro.runtime.tunables import timed_server_drain, timed_trace_drain
+from repro.runtime.workload import (TraceConfig, drive_trace,
+                                    generate_trace, records_from_events,
+                                    summarize)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_config("smollm-135m").reduced().replace(
+        logits_dtype="float32")
+    api = build_model(cfg)
+    return api, api.init(jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+
+def test_counter_gauge_basics():
+    reg = MetricsRegistry()
+    c = reg.counter("serve.retired", "done")
+    c.inc()
+    c.inc(3)
+    assert c.value == 4
+    with pytest.raises(ValueError, match="must be >= 0"):
+        c.inc(-1)
+    g = reg.gauge("serve.queue_depth")
+    g.set(7)
+    g.inc(2)
+    g.dec()
+    assert g.value == 8
+    # same (name, labels) returns the same instrument
+    assert reg.counter("serve.retired") is c
+
+
+def test_registry_kind_conflict_and_labels():
+    reg = MetricsRegistry()
+    reg.counter("serve.preemptions", reason="slo-preempt").inc()
+    reg.counter("serve.preemptions", reason="oom-defer").inc(2)
+    with pytest.raises(ValueError, match="registered as"):
+        reg.gauge("serve.preemptions")
+    snap = reg.snapshot()
+    assert snap["counters"]['serve.preemptions{reason="oom-defer"}'] == 2
+    assert snap["counters"]['serve.preemptions{reason="slo-preempt"}'] == 1
+
+
+def test_histogram_log_buckets_and_quantiles():
+    assert Histogram.bucket_of(0) == 0
+    assert Histogram.bucket_of(1) == 0
+    assert Histogram.bucket_of(2) == 1
+    assert Histogram.bucket_of(3) == 2
+    assert Histogram.bucket_of(1024) == 10
+    h = Histogram()
+    for v in (1, 1, 2, 4, 100):
+        h.observe(v)
+    assert h.count == 5 and h.sum == 108
+    assert h.mean() == pytest.approx(108 / 5)
+    # quantiles come back as bucket upper edges
+    assert h.quantile(0.5) == 2
+    assert h.quantile(0.99) == 128
+
+
+def test_collect_prefix_and_prometheus():
+    reg = MetricsRegistry()
+    reg.gauge("traffic.ticks").set(42)
+    reg.gauge("traffic.mean_active").set(2.5)
+    reg.gauge("other.thing").set(9)
+    got = reg.collect("traffic")
+    assert got == {"ticks": 42.0, "mean_active": 2.5}
+    reg.counter("serve.retired", "completed requests").inc(3)
+    reg.histogram("serve.latency_ticks", slo="interactive").observe(5)
+    text = reg.to_prometheus()
+    assert "# TYPE serve_retired counter" in text
+    assert "serve_retired 3" in text
+    assert '# HELP serve_retired completed requests' in text
+    assert 'serve_latency_ticks_bucket{slo="interactive",le="8"} 1' in text
+    assert 'serve_latency_ticks_count{slo="interactive"} 1' in text
+
+
+# ---------------------------------------------------------------------------
+# trace recorder round-trip, nesting, validation
+# ---------------------------------------------------------------------------
+
+
+def _tiny_recording() -> TraceRecorder:
+    rec = TraceRecorder()
+    rec.begin("tick", tick=1)
+    rec.begin("phase.decode", tick=1)
+    rec.end("phase.decode", tick=1, slots=2)
+    rec.end("tick", tick=1, decode=2)
+    rec.begin("request", track=("request", 0), tick=1, slo="batch")
+    rec.instant("workload.submitted", track=("request", 0), tick=1,
+                rid=0, arrival=0, slo="batch", deadline=0.0)
+    rec.counter("active_slots", 2, tick=1)
+    rec.end("request", track=("request", 0), tick=3, tokens=4)
+    return rec
+
+
+def test_trace_export_parse_roundtrip(tmp_path):
+    rec = _tiny_recording()
+    path = tmp_path / "t.json"
+    doc = export_trace(rec.events, str(path))
+    on_disk = json.loads(path.read_text())
+    assert on_disk["kind"] == doc["kind"]
+    assert validate_trace(doc) == []
+    assert parse_trace(doc) == rec.events
+    # same round-trip through the file
+    assert parse_trace(on_disk) == rec.events
+
+
+def test_span_pairing_and_open_span_truncation():
+    rec = TraceRecorder()
+    rec.begin("request", track=("request", 1), tick=2)
+    rec.begin("queued", track=("request", 1), tick=2)
+    rec.end("queued", track=("request", 1), tick=4)
+    rec.begin("running", track=("request", 1), tick=4)
+    # drain aborted mid-flight: running and request are still open
+    assert rec.open_spans(("request", 1)) == ["request", "running"]
+    assert rec.close_open_spans() == 2
+    spans = spans_from_events(rec.events)
+    (req,) = spans
+    assert req.name == "request"
+    assert [c.name for c in req.children] == ["queued", "running"]
+    ends = [ev for ev in rec.events if ev["ph"] == "E"]
+    assert all(ev["args"].get("truncated") for ev in ends[-2:])
+    # innermost closes first, and closing ticks stay monotone
+    assert ends[-2]["name"] == "running" and ends[-1]["name"] == "request"
+    assert validate_trace(export_trace(rec.events)) == []
+
+
+def test_validate_trace_flags_problems():
+    rec = _tiny_recording()
+    doc = export_trace(rec.events)
+    assert validate_trace(doc) == []
+    bad = dict(doc, kind="something-else")
+    assert any("kind" in p for p in validate_trace(bad))
+    # tick running backwards on a track
+    rec2 = TraceRecorder()
+    rec2.begin("tick", tick=5)
+    rec2.end("tick", tick=5)
+    rec2.begin("tick", tick=3)
+    rec2.end("tick", tick=3)
+    assert any("tick" in p for p in
+               validate_trace(export_trace(rec2.events)))
+    # unbalanced nesting
+    rec3 = TraceRecorder()
+    rec3.begin("a", tick=1)
+    rec3.begin("b", tick=1)
+    rec3.end("a", tick=1)
+    assert validate_trace(export_trace(rec3.events))
+
+
+def test_records_from_events_rebuilds_workload_records():
+    rec = TraceRecorder()
+    rec.instant("workload.submitted", track=("request", 0), tick=0,
+                rid=0, arrival=2, slo="interactive", deadline=10.0)
+    rec.instant("workload.retired", track=("request", 0), tick=5,
+                rid=0, finish=7, tokens=4)
+    rec.instant("workload.submitted", track=("request", 1), tick=1,
+                rid=1, arrival=3, slo="batch", deadline=4.0)
+    rec.instant("workload.retired", track=("request", 1), tick=6,
+                rid=1, finish=9, tokens=2)
+    records = records_from_events(rec.events)
+    assert records[0] == {"arrival": 2, "slo": "interactive",
+                          "deadline": 10.0, "finish": 7, "latency": 5,
+                          "met": True, "tokens": 4}
+    assert records[1]["met"] is False and records[1]["latency"] == 6
+    s = summarize(records, ticks=9)
+    assert s["requests"] == 2 and s["goodput_tokens"] == 4.0
+
+
+# ---------------------------------------------------------------------------
+# attached observability: parity, nesting, shim — real drains
+# ---------------------------------------------------------------------------
+
+
+def _outs(records):
+    return {rid: tuple(rec["request"].out) for rid, rec in records.items()}
+
+
+def test_traced_drain_parity_and_valid_trace(model):
+    """Attaching trace+metrics+monitor changes neither the outputs nor
+    the summarize numbers; the exported doc passes validation and the
+    monitor accepts the allocator op stream."""
+
+    api, params = model
+    tc = TraceConfig(requests=6, arrival="bursty", burst=3, burst_every=4,
+                     prompt_len=(6, 12), max_new=(3, 5), shared_frac=0.5,
+                     prefix_len=8, seed=11)
+    trace = generate_trace(tc)
+
+    def drain(obs):
+        srv = Server(api, params, batch=2, context=48, prefill_chunk=8,
+                     paged=True, page_size=4, scheduler="prefix",
+                     share_prefix=True, obs=obs)
+        records = drive_trace(srv, trace)
+        return srv, records
+
+    _, plain = drain(None)
+    obs = Observability(trace=True, metrics=True, monitor=True)
+    srv, traced = drain(obs)
+    assert _outs(traced) == _outs(plain)
+    base = {k: {kk: vv for kk, vv in r.items() if kk != "request"}
+            for k, r in plain.items()}
+    got = {k: {kk: vv for kk, vv in r.items() if kk != "request"}
+          for k, r in traced.items()}
+    assert got == base
+    assert summarize(traced, srv.ticks) == summarize(plain, srv.ticks)
+
+    assert obs.monitor.accepted and obs.monitor.ops_checked > 0
+    doc = obs.export()
+    assert validate_trace(doc) == []
+    assert doc["monitor"]["status"] == "accepted"
+    # the trace events alone reproduce the workload records
+    parsed = records_from_events(parse_trace(doc))
+    assert parsed == base
+    # every retired request nests queued -> running inside its span
+    by_track = {}
+    for ev in parse_trace(doc):
+        by_track.setdefault(tuple(ev["track"]), []).append(ev)
+    ran = 0
+    for track, evs in by_track.items():
+        if track[0] != "request":
+            continue
+        names = [sp.name for sp in spans_from_events(evs)]
+        assert names == ["request"]
+        kids = [c.name for c in spans_from_events(evs)[0].children]
+        assert kids[0] == "queued" and "running" in kids
+        ran += 1
+    assert ran == 6
+    # registry carried the lifecycle counters
+    snap = obs.registry.snapshot()
+    assert snap["counters"]["serve.retired"] == 6
+    assert any(k.startswith("serve.latency_ticks")
+               for k in snap["histograms"])
+
+
+def test_preemption_spans_nest_queued_running_cycles(model):
+    """A preempted request's track reads queued -> running ->
+    queued(resumed) -> running inside one request span, and the slot
+    track shows both occupancies."""
+
+    api, params = model
+    obs = Observability(trace=True, metrics=True, monitor=True)
+    srv = Server(api, params, batch=1, context=48, paged=True, page_size=4,
+                 prefill_chunk=8, scheduler="priority", obs=obs)
+    rb = srv.submit(list(range(1, 17)), max_new=6, slo="batch")
+    for _ in range(4):
+        srv.tick()
+    ri = srv.submit([7, 5, 3, 2], max_new=4, slo="interactive",
+                    deadline=20.0)
+    srv.run_until_drained()
+    assert rb.preempted >= 1 and rb.done and ri.done
+
+    doc = obs.export()
+    assert validate_trace(doc) == []
+    evs = [ev for ev in parse_trace(doc)
+           if tuple(ev["track"]) == ("request", rb.rid)]
+    (req_span,) = spans_from_events(evs)
+    kids = [c.name for c in req_span.children]
+    assert kids == ["queued", "running"] * (1 + rb.preempted)
+    resumed = [c for c in req_span.children
+               if c.name == "queued" and c.args.get("resumed")]
+    assert len(resumed) == rb.preempted
+    # slot 0 hosted the batch request twice and the interactive one once
+    slot_spans = spans_from_events(
+        [ev for ev in parse_trace(doc)
+         if tuple(ev["track"]) == ("slot", 0)])
+    occupants = [sp.args["rid"] for sp in slot_spans]
+    assert occupants.count(rb.rid) == 1 + rb.preempted
+    assert occupants.count(ri.rid) == 1
+    snap = obs.registry.snapshot()
+    assert snap["counters"][
+        'serve.preemptions{reason="slo-preempt"}'] == rb.preempted
+    assert obs.monitor.accepted
+
+
+def test_timed_drain_stats_out_shim_parity(model):
+    """Both drain harnesses now route stats through the metrics
+    registry; the stats_out dict is rebuilt from it, so the two views
+    must agree key for key."""
+
+    api, params = model
+    reg = MetricsRegistry()
+    stats: dict = {}
+    timed_server_drain(api, params, batch=2, context=32,
+                       prompts=[[1, 2, 3], [4, 5, 6, 7]], max_new=3,
+                       registry=reg, stats_out=stats, warmup=0, iters=1)
+    assert stats and stats == reg.collect("serve")
+    assert "ticks" in stats
+
+    tc = TraceConfig(requests=4, prompt_len=(4, 8), max_new=(2, 3),
+                     seed=5)
+    reg2 = MetricsRegistry()
+    stats2: dict = {}
+    timed_trace_drain(api, params, generate_trace(tc), batch=2,
+                      context=48, prefill_chunk=8, paged=True,
+                      page_size=4, registry=reg2, stats_out=stats2,
+                      warmup=0, iters=1)
+    records = stats2.pop("records")
+    assert len(records) == 4
+    assert stats2 == reg2.collect("traffic")
+    for key in ("p99_all", "slo_attainment", "goodput_per_tick",
+                "prefill_chunks", "preemptions"):
+        assert key in stats2
+
+
+# ---------------------------------------------------------------------------
+# online conformance monitor: clean pass + planted mutant end-to-end
+# ---------------------------------------------------------------------------
+
+
+def test_mutant_trips_monitor_and_trail_replays(model, tmp_path,
+                                                capsys):
+    """Planting ``release-leaks-shared`` into a live drain trips the
+    online monitor mid-drain, and the dumped counterexample trail
+    replays to a concrete divergence via ``python -m repro.verify
+    replay`` (exit 1)."""
+
+    from repro.verify.cli import main as verify_main
+    from repro.verify.mutants import MUTANTS
+
+    api, params = model
+    obs = Observability(trace=True, metrics=True, monitor=True,
+                        monitor_window=64)
+    srv = Server(api, params, batch=3, context=48, prefill_chunk=8,
+                 paged=True, page_size=4, kv_pages=24,
+                 scheduler="prefix", share_prefix=True, obs=obs)
+    srv.alloc.__class__ = MUTANTS["release-leaks-shared"]
+
+    tc = TraceConfig(requests=10, arrival="bursty", burst=3,
+                     burst_every=4, prompt_len=(6, 14), max_new=(3, 6),
+                     shared_frac=1.0, prefix_len=8, seed=3)
+    pending = iter(sorted(generate_trace(tc),
+                          key=lambda r: (r.arrival, r.rid)))
+    nxt = next(pending, None)
+    clock = 0
+    while (nxt is not None or srv.queue
+           or any(r is not None for r in srv.slot_req)):
+        while nxt is not None and nxt.arrival <= clock:
+            srv.submit(list(nxt.prompt), max_new=nxt.max_new,
+                       slo=nxt.slo)
+            nxt = next(pending, None)
+        srv.tick()
+        clock += 1
+        if obs.monitor.violation is not None:
+            break                       # tripped mid-drain
+        assert clock < 2000, "mutant never tripped the monitor"
+    assert obs.monitor.violation is not None
+    assert not obs.monitor.accepted
+    assert obs.monitor.allocator_name == "release-leaks-shared"
+    assert "divergence" in obs.monitor.violation["message"]
+    # the buggy op itself made it into the recorded stream
+    assert any(op[0] == "release" for op in obs.monitor.ops)
+
+    trail = tmp_path / "trail.json"
+    payload = obs.monitor.dump_trail(str(trail))
+    assert payload["allocator"] == "release-leaks-shared"
+    assert payload["replayable"]
+    assert json.loads(trail.read_text()) == payload
+    rc = verify_main(["replay", "--trail", str(trail)])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "REPRODUCED" in out and "release" in out
+
+    # the violation is stamped into the exported doc, and the offline
+    # re-check agrees with the online verdict
+    doc = obs.export()
+    assert doc["monitor"]["status"] == "violation"
+    assert any(ev["name"] == "conformance.violation"
+               for ev in parse_trace(doc))
+
+
+def test_obs_cli_summarize_check_export(model, tmp_path, capsys):
+    """The ``python -m repro.obs`` surface: summarize prints a digest,
+    check passes a clean monitored trace (including the offline
+    conformance re-run), export strips to pure Chrome JSON."""
+
+    from repro.obs.cli import main as obs_main
+
+    api, params = model
+    tc = TraceConfig(requests=4, prompt_len=(4, 8), max_new=(2, 3),
+                     shared_frac=0.5, prefix_len=4, seed=7)
+    obs = Observability(trace=True, metrics=True, monitor=True)
+    srv = Server(api, params, batch=2, context=48, prefill_chunk=8,
+                 paged=True, page_size=4, scheduler="prefix",
+                 share_prefix=True, obs=obs)
+    drive_trace(srv, generate_trace(tc))
+    path = tmp_path / "trace.json"
+    obs.export(str(path))
+
+    assert obs_main(["summarize", str(path)]) == 0
+    out = capsys.readouterr().out
+    assert "workload: 4 requests" in out
+    assert "monitor: accepted" in out
+
+    assert obs_main(["check", str(path), "--json"]) == 0
+    report = json.loads(capsys.readouterr().out)
+    assert report["ok"] and report["problems"] == []
+    assert report["monitor"] == "accepted"
+    assert report["monitor_recheck"] == "accepted"
+
+    chrome = tmp_path / "chrome.json"
+    assert obs_main(["export", str(path), "--out", str(chrome)]) == 0
+    capsys.readouterr()
+    stripped = json.loads(chrome.read_text())
+    assert set(stripped) == {"displayTimeUnit", "traceEvents"}
+    assert stripped["traceEvents"] == json.loads(
+        path.read_text())["traceEvents"]
+
+    # a tampered monitor section fails the offline re-check
+    doc = json.loads(path.read_text())
+    doc["monitor"]["records"][0][2] = False
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps(doc))
+    assert obs_main(["check", str(bad)]) == 1
+    assert "FAILED" in capsys.readouterr().out
